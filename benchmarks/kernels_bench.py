@@ -1,0 +1,57 @@
+"""Kernel microbenchmarks: interpret-mode timing is NOT hardware-
+representative — the derived column reports the roofline-relevant
+quantities (FLOPs, bytes, arithmetic intensity) per kernel call."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro.kernels import ops
+from repro.quant import quantize_int8
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    # flash attention
+    B, H, KV, T, hd = 1, 4, 2, 256, 64
+    q = jnp.asarray(rng.normal(size=(B, T, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, KV, hd)), jnp.float32)
+    us, _ = time_call(lambda: ops.flash_attention_btHd(
+        q, k, v, block_q=64, block_k=64).block_until_ready(), reps=3)
+    flops = 4 * B * H * T * T * hd
+    bytes_ = 2 * B * T * (H + 2 * KV) * hd * 4
+    rows.append(row("kernel.flash_attention", us,
+                    {"flops": flops, "bytes": bytes_,
+                     "intensity": f"{flops/bytes_:.1f}"}))
+    # decode attention
+    S = 1024
+    qd = jnp.asarray(rng.normal(size=(B, 1, H, hd)), jnp.float32)
+    kd = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    vd = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    pos = jnp.asarray(np.arange(S), jnp.int32)
+    us, _ = time_call(lambda: ops.decode_attention(
+        qd, kd, vd, pos, jnp.int32(S - 1), block_s=128).block_until_ready(),
+        reps=3)
+    flops = 4 * B * H * S * hd
+    bytes_ = 2 * B * S * KV * hd * 4
+    rows.append(row("kernel.decode_attention", us,
+                    {"flops": flops, "bytes": bytes_,
+                     "intensity": f"{flops/bytes_:.2f}",
+                     "note": "memory-bound (reads whole cache)"}))
+    # int8 matmul
+    M, K, N = 256, 512, 512
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    wq, sc = quantize_int8(w, axis=0)
+    us, _ = time_call(lambda: ops.int8_matmul(
+        x, wq, sc.reshape(-1), block_m=128, block_n=128,
+        block_k=128).block_until_ready(), reps=3)
+    rows.append(row("kernel.int8_matmul", us,
+                    {"flops": 2 * M * K * N,
+                     "weight_bytes_vs_bf16": f"{K*N}/{K*N*2}"}))
+    return rows

@@ -1,0 +1,43 @@
+"""Paper Fig 5: impact of CNN models / device capability — LM analogue:
+decode & prefill cost across the 10-arch zoo (roofline pod numbers) and
+measured CPU latency across reduced model sizes (the 'device capability'
+axis: one CPU host standing in for phone tiers)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, load_dryrun_results
+from repro.configs import reduced_config
+from repro.models import init_params
+from repro.serving.engine import InferenceEngine
+
+
+def run():
+    rows = []
+    # "device tiers": widths of a reduced model on this host.
+    base = reduced_config("stablelm_1_6b")
+    for name, d_model, layers in [("xs", 32, 2), ("s", 64, 4), ("m", 128, 6)]:
+        cfg = dataclasses.replace(base, d_model=d_model, n_layers=layers,
+                                  n_heads=4, n_kv_heads=4,
+                                  head_dim=d_model // 4, d_ff=d_model * 2)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        eng = InferenceEngine(cfg, params, batch_size=1, max_seq=64)
+        eng.warmup(8)
+        p = eng.measured_profile(prompt_len=8, n_tokens=8, reps=3)
+        rows.append(row(f"fig5.device.{name}", p["mu"] * 1000.0,
+                        {"params": cfg.param_count(),
+                         "ms_per_req": f"{p['mu']:.1f}"}))
+    # zoo sweep from the roofline (pod).
+    res = load_dryrun_results("pod")
+    for (arch, shape), d in sorted(res.items()):
+        if shape != "prefill_32k" or d.get("skipped"):
+            continue
+        rows.append(row(f"fig5.zoo_prefill.{arch}",
+                        d["step_time_est_s"] * 1e6,
+                        {"prefill_s": f"{d['step_time_est_s']:.2f}",
+                         "dominant": d["dominant"]}))
+    return rows

@@ -1,0 +1,31 @@
+"""Paper Fig 10: cloud-based inference under different mobile network
+conditions — end-to-end classification time distribution per network,
+plus CNNSelect's attainment per network at a fixed SLA."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.configs.paper_zoo import paper_profiles
+from repro.serving.network import NetworkModel
+from repro.serving.simulator import SimConfig, simulate
+
+
+def run(n_requests: int = 2000):
+    profs = paper_profiles()
+    rows = []
+    rng = np.random.default_rng(0)
+    for net in ("edge_wired", "campus_wifi", "lte", "cellular_hotspot"):
+        t_in = NetworkModel.named(net).sample_t_input(rng, 4000)
+        r = simulate(profs, SimConfig(t_sla=400, n_requests=n_requests,
+                                      network=net, seed=0))
+        nw_frac = 2 * t_in.mean() / r.mean_latency
+        rows.append(row(
+            f"fig10.{net}", 0.0,
+            {"t_input_mean_ms": f"{t_in.mean():.1f}",
+             "t_input_p95_ms": f"{np.percentile(t_in, 95):.1f}",
+             "e2e_mean_ms": f"{r.mean_latency:.1f}",
+             "network_share": f"{nw_frac:.2f}",
+             "attainment@400ms": f"{r.attainment:.3f}"}))
+    return rows

@@ -1,0 +1,57 @@
+"""Paper Fig 12: end-to-end prototype — a real 2-model server (tiny +
+small engines actually executing on this host), SLA sweep, measuring SLA
+attainment and the automatic transition between models as the budget
+grows. (The trained-accuracy version lives in examples/serve_e2e.py;
+here accuracies are configured so the bench stays fast.)"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from benchmarks.common import row
+from repro.configs import reduced_config
+from repro.models import init_params
+from repro.serving.batching import Request
+from repro.serving.engine import InferenceEngine
+from repro.serving.server import CNNSelectServer, ServedModel
+
+
+def _server():
+    models = []
+    cfg_t = reduced_config("stablelm_1_6b")
+    cfg_s = dataclasses.replace(reduced_config("stablelm_1_6b"),
+                                n_layers=6, d_model=192, n_heads=6,
+                                n_kv_heads=6, head_dim=32, d_ff=384)
+    for name, cfg, acc in [("tiny", cfg_t, 0.62), ("small", cfg_s, 0.88)]:
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        eng = InferenceEngine(cfg, params, batch_size=1, max_seq=64)
+        models.append(ServedModel(name=name, engine=eng, accuracy=acc))
+    srv = CNNSelectServer(models, t_threshold=30.0, n_tokens=4)
+    srv.profile_models(prompt_len=8, reps=3)
+    return srv
+
+
+def run(n_requests: int = 12):
+    srv = _server()
+    profs = {p.name: p for p in srv.current_profiles()}
+    rows = [row("fig12.profiles", 0.0,
+                {n: f"{p.mu:.0f}±{p.sigma:.0f}ms" for n, p in profs.items()})]
+    rng = np.random.default_rng(0)
+    tiny_mu = profs["tiny"].mu
+    small_mu = profs["small"].mu
+    for sla in (tiny_mu * 2, (tiny_mu + small_mu) * 1.2, small_mu * 6):
+        srv.metrics = type(srv.metrics)()
+        for i in range(n_requests):
+            req = Request(arrival=0.0, rid=i,
+                          prompt=rng.integers(0, 50, 8).astype(np.int32),
+                          t_input_ms=float(rng.normal(8, 2)))
+            srv.handle(req, t_sla=float(sla))
+        s = srv.metrics.summary()
+        rows.append(row(f"fig12.sla{int(sla)}ms", s["mean_ms"] * 1000.0,
+                        {"attainment": f"{s['attainment']:.2f}",
+                         "accuracy": f"{s['accuracy']:.2f}",
+                         "selections": str(s["selections"]).replace(",", "/")}))
+    return rows

@@ -1,0 +1,31 @@
+"""Assignment §Roofline: the full baseline table from the dry-run JSONs —
+three terms, dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, memory fit."""
+
+from __future__ import annotations
+
+from benchmarks.common import row, load_dryrun_results
+
+
+def run(mesh: str = "pod", tag: str = "baseline"):
+    rows = []
+    res = load_dryrun_results(mesh, tag)
+    for (arch, shape), d in sorted(res.items()):
+        if d.get("skipped"):
+            rows.append(row(f"roofline.{mesh}.{arch}.{shape}", 0.0,
+                            {"skipped": "subquadratic-required"}))
+            continue
+        m = d["memory"]
+        peak = (m["argument_bytes"] + m["output_bytes"] + m["temp_bytes"]
+                - m["alias_bytes"]) / 1e9
+        t = d["terms"]
+        rows.append(row(
+            f"roofline.{mesh}.{arch}.{shape}",
+            d["step_time_est_s"] * 1e6,
+            {"compute_s": f"{t['compute_s']:.4f}",
+             "memory_s": f"{t['memory_s']:.4f}",
+             "collective_s": f"{t['collective_s']:.4f}",
+             "dominant": d["dominant"],
+             "useful_ratio": f"{d['useful_flops_ratio']:.3f}",
+             "peak_GB": f"{peak:.1f}",
+             "fits16GB": peak <= 16.0}))
+    return rows

@@ -1,0 +1,61 @@
+"""Benchmark runner: one module per paper table/figure + assignment
+artifacts. Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig13,roofline] [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks.common import emit
+
+MODULES = [
+    ("fig3_device_vs_cloud", "benchmarks.device_vs_cloud"),
+    ("fig4_startup_latency", "benchmarks.startup_latency"),
+    ("fig5_model_sweep", "benchmarks.model_sweep"),
+    ("fig6_quantization", "benchmarks.quantization"),
+    ("fig9_server_capacity", "benchmarks.server_capacity"),
+    ("fig10_network_conditions", "benchmarks.network_conditions"),
+    ("fig12_prototype_e2e", "benchmarks.prototype_e2e"),
+    ("fig13_selection_vs_greedy", "benchmarks.selection_vs_greedy"),
+    ("kernels", "benchmarks.kernels_bench"),
+    ("roofline_pod", "benchmarks.roofline"),
+    ("table5_zoo", "benchmarks.zoo_table"),
+    ("lmzoo_selection", "benchmarks.lm_zoo_selection"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substring filters")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the engine-executing benches")
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else None
+    slow = {"fig3_device_vs_cloud", "fig4_startup_latency",
+            "fig5_model_sweep", "fig12_prototype_e2e", "kernels"}
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in MODULES:
+        if only and not any(o in name for o in only):
+            continue
+        if args.fast and name in slow:
+            continue
+        try:
+            import importlib
+            m = importlib.import_module(mod)
+            emit(m.run())
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},0.0,ERROR", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Paper Fig 13 (+ headline claim): CNNSelect vs greedy over an SLA sweep,
+10k-request simulations seeded with Table 5 profiles + paper network
+measurements. Reports SLA attainment, effective accuracy, latency, and
+the "maintains attainment in X% more cases" aggregate across the
+(SLA x network) grid (paper: 88.5%)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro.configs.paper_zoo import paper_profiles
+from repro.serving.simulator import (SimConfig, simulate, sla_sweep,
+                                     attainment_improvement)
+
+# Paper Fig 12/13 sweep the 0-500 ms band; attainment target 0.9.
+SLAS = np.arange(60, 501, 20)
+NETWORKS = ("campus_wifi", "lte", "cellular_hotspot")
+
+
+def run(n_requests: int = 2000):
+    profs = paper_profiles()
+    rows = []
+    # Fig 13a/b analogue at three representative SLAs.
+    for sla in (115, 250, 600):
+        ours = simulate(profs, SimConfig(t_sla=sla, n_requests=n_requests,
+                                         seed=0))
+        grd = simulate(profs, SimConfig(t_sla=sla, n_requests=n_requests,
+                                        policy="greedy", seed=0))
+        lat_red = 100.0 * (1 - ours.mean_latency / grd.mean_latency)
+        rows.append(row(
+            f"fig13.sla{sla}", 0.0,
+            {"ours_att": f"{ours.attainment:.3f}",
+             "greedy_att": f"{grd.attainment:.3f}",
+             "ours_acc": f"{ours.accuracy:.3f}",
+             "greedy_acc": f"{grd.accuracy:.3f}",
+             "latency_reduction_pct": f"{lat_red:.1f}"}))
+    # Headline aggregate across the (SLA x network) grid.
+    total_ours = total_base = total_more = 0
+    for net in NETWORKS:
+        res = attainment_improvement(profs, SLAS, n_requests=n_requests // 4,
+                                     target=0.9, network=net, seed=1)
+        total_ours += res["ours_ok_cases"]
+        total_base += res["base_ok_cases"]
+        rows.append(row(f"fig13.grid.{net}", 0.0,
+                        {"ours_ok": res["ours_ok_cases"],
+                         "greedy_ok": res["base_ok_cases"],
+                         "n_slas": len(SLAS)}))
+    more = 100.0 * (total_ours - total_base) / max(total_base, 1)
+    rows.append(row("fig13.headline_more_cases_pct", 0.0,
+                    {"ours": total_ours, "greedy": total_base,
+                     "more_pct": f"{more:.1f}", "paper_claims": "88.5"}))
+    # Selection histogram shift (Fig 13b).
+    names = [p.name for p in profs]
+    tight = simulate(profs, SimConfig(t_sla=160, n_requests=n_requests,
+                                      seed=0)).selection_histogram(names)
+    loose = simulate(profs, SimConfig(t_sla=900, n_requests=n_requests,
+                                      seed=0)).selection_histogram(names)
+    top_t = max(tight, key=tight.get)
+    top_l = max(loose, key=loose.get)
+    rows.append(row("fig13.selection_shift", 0.0,
+                    {"tight_top": top_t, "loose_top": top_l}))
+    return rows

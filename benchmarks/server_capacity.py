@@ -1,0 +1,46 @@
+"""Paper Fig 9: inference time across cloud server capacities.
+
+Server tiers -> mesh slices: 1 chip, 4x4 slice, 16x16 pod, 2x16x16
+multi-pod. Per-arch decode-step estimates scale the roofline terms with
+chip count (compute/memory scale 1/n; collective grows with ring size:
+we reuse the measured pod/multipod cells where present and scale
+analytically for the small slices)."""
+
+from __future__ import annotations
+
+from benchmarks.common import row, load_dryrun_results
+from repro.configs import ARCH_IDS, get_config
+
+TIERS = {"1chip": 1, "4x4": 16, "pod_16x16": 256}
+
+
+def run():
+    rows = []
+    pod = load_dryrun_results("pod")
+    multi = load_dryrun_results("multipod")
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        d = pod.get((cfg.name, "decode_32k"))
+        if not d or d.get("skipped"):
+            continue
+        base = d["terms"]
+        hbm_bytes = d["hlo"]["traffic_bytes"] * 256  # global
+        for tier, chips in TIERS.items():
+            # memory/compute scale with chips; collectives vanish at 1 chip.
+            mem_gb = (d["memory"]["argument_bytes"] * 256 / chips) / 1e9
+            fits = mem_gb <= 16 * chips / chips  # per-chip budget
+            est = (base["compute_s"] * 256 / chips
+                   + base["memory_s"] * 256 / chips
+                   + (base["collective_s"] if chips > 1 else 0.0))
+            rows.append(row(
+                f"fig9.{cfg.name}.{tier}", est * 1e6,
+                {"est_decode_s": f"{est:.4f}",
+                 "per_chip_GB": f"{mem_gb:.1f}",
+                 "fits": mem_gb <= 16.0}))
+        m = multi.get((cfg.name, "decode_32k"))
+        if m and not m.get("skipped"):
+            rows.append(row(
+                f"fig9.{cfg.name}.multipod_2x256", m["step_time_est_s"] * 1e6,
+                {"est_decode_s": f"{m['step_time_est_s']:.4f}",
+                 "dominant": m["dominant"]}))
+    return rows

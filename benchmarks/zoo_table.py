@@ -1,0 +1,36 @@
+"""Paper Table 5: the model zoo's statistics. Two zoos:
+- the paper's CNN zoo (seed data, echoed for reference), and
+- the LM zoo = the 10 assigned architectures with roofline-DERIVED
+  decode/prefill latency profiles per mesh (this is what CNNSelect
+  selects over at pod scale)."""
+
+from __future__ import annotations
+
+from benchmarks.common import row, load_dryrun_results
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.paper_zoo import TABLE5
+from repro.utils import human_count
+
+
+def run():
+    rows = []
+    for name, (t1, t5, mu, sg, cmu, csg) in TABLE5.items():
+        rows.append(row(f"table5.cnn.{name}", mu * 1000.0,
+                        {"top1": t1, "hot_ms": mu, "cold_ms": cmu}))
+    res = load_dryrun_results("pod")
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        dec = res.get((cfg.name, "decode_32k"))
+        pre = res.get((cfg.name, "prefill_32k"))
+        if not dec or dec.get("skipped"):
+            continue
+        dec_ms = dec["step_time_est_s"] * 1000.0
+        pre_ms = pre["step_time_est_s"] * 1000.0 if pre else 0.0
+        rows.append(row(
+            f"table5.lm.{cfg.name}", dec_ms * 1000.0,
+            {"params": human_count(cfg.param_count()),
+             "active": human_count(cfg.active_param_count()),
+             "decode_step_ms": f"{dec_ms:.2f}",
+             "prefill_s": f"{pre_ms/1000.0:.2f}",
+             "dominant": dec["dominant"]}))
+    return rows

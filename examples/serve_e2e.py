@@ -1,0 +1,102 @@
+"""End-to-end serving demo (paper §5.2.1 prototype, Fig 12).
+
+Trains TWO real LMs of different capacity on the copy task (the LM
+analogue of the paper's accuracy axis: the bigger model genuinely copies
+better), measures their REAL latency profiles on this host, then runs a
+CNNSelect SLA sweep with live engines and prints attainment/accuracy per
+SLA — reproducing the Fig 12 transition between models.
+
+    PYTHONPATH=src python examples/serve_e2e.py [--steps 150] [--requests 30]
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.data import CopyTask
+from repro.models import init_params
+from repro.serving.batching import Request
+from repro.serving.engine import InferenceEngine
+from repro.serving.network import NetworkModel
+from repro.serving.server import CNNSelectServer, ServedModel
+from repro.training.optim import adamw, constant_schedule
+from repro.training.step import make_train_step, init_train_state
+
+
+def train_model(cfg, task, steps, lr=3e-3, seed=0):
+    opt = adamw(constant_schedule(lr))
+    step = jax.jit(make_train_step(cfg, opt))
+    state = init_train_state(cfg, opt, jax.random.PRNGKey(seed))
+    for i in range(steps):
+        b = task.batch(i, 16)
+        state, m = step(state, {"inputs": jnp.asarray(b["inputs"]),
+                                "labels": jnp.asarray(b["labels"])})
+    return state["params"], float(m["loss"])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--requests", type=int, default=30)
+    args = ap.parse_args()
+
+    task = CopyTask(vocab=32, prompt_len=6)
+    base = reduced_config("stablelm_1_6b")
+    tiny = dataclasses.replace(base, vocab=32, n_layers=1, d_model=32,
+                               n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64)
+    small = dataclasses.replace(base, vocab=32, n_layers=4, d_model=96,
+                                n_heads=4, n_kv_heads=4, head_dim=24,
+                                d_ff=192)
+
+    models = []
+    for name, cfg, steps in [("tiny", tiny, args.steps),
+                             ("small", small, args.steps * 2)]:
+        print(f"training {name} ({cfg.param_count():,} params, "
+              f"{steps} steps)...", flush=True)
+        params, loss = train_model(cfg, task, steps)
+        eng = InferenceEngine(cfg, params, batch_size=1,
+                              max_seq=task.prompt_len * 2 + 2)
+        eng.warmup(task.prompt_len + 1)
+        acc = task.exact_match(eng, n_batches=8)
+        print(f"  final loss {loss:.3f}, copy accuracy {acc:.2%}")
+        models.append(ServedModel(name=name, engine=eng, accuracy=float(acc)))
+
+    assert models[1].accuracy > models[0].accuracy, \
+        "bigger model should copy better; increase --steps"
+
+    srv = CNNSelectServer(models, t_threshold=25.0,
+                          n_tokens=task.prompt_len)
+    srv.profile_models(prompt_len=task.prompt_len + 1, reps=5)
+    for p in srv.current_profiles():
+        print(f"profile {p.name}: mu={p.mu:.1f}ms sigma={p.sigma:.1f}ms "
+              f"accuracy={p.accuracy:.2%}")
+
+    net = NetworkModel.named("campus_wifi")
+    rng = np.random.default_rng(0)
+    mus = {p.name: p.mu for p in srv.current_profiles()}
+    slas = [mus["tiny"] * 1.5 + 130, (mus["tiny"] + mus["small"]) / 2 + 160,
+            mus["small"] * 1.6 + 160, mus["small"] * 4 + 200]
+    print(f"\n{'SLA(ms)':>8} | {'attain':>6} | {'acc':>6} | selections")
+    for sla in slas:
+        srv.metrics = type(srv.metrics)()
+        for i in range(args.requests):
+            d = task.batch(10_000 + i, 1)
+            req = Request(arrival=0.0, rid=i, prompt=d["prompt"][0],
+                          t_input_ms=float(net.sample_t_input(rng, 1)[0]))
+            srv.handle(req, t_sla=float(sla))
+        s = srv.metrics.summary()
+        print(f"{sla:8.0f} | {s['attainment']:6.2f} | {s['accuracy']:6.2%} "
+              f"| {s['selections']}")
+    print("\nAs the SLA relaxes CNNSelect shifts traffic from the fast/"
+          "inaccurate model to the slow/accurate one (paper Fig 12).")
+
+
+if __name__ == "__main__":
+    main()

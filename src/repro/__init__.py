@@ -1,0 +1,10 @@
+"""repro: SLA-aware multi-model inference serving framework in JAX.
+
+Reproduction of Ogden & Guo, "Characterizing the Deep Neural Networks
+Inference Performance of Mobile Applications" (2019), adapted to TPU
+pods: a zoo of large LMs with per-(arch, shape, mesh) latency profiles
+and the CNNSelect SLA-aware model-selection algorithm in front of a
+distributed batched inference engine.
+"""
+
+__version__ = "0.1.0"

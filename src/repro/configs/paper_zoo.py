@@ -1,0 +1,80 @@
+"""The paper's own measured data, used to seed simulations & benchmarks.
+
+- TABLE5: CNN model statistics (top-1/top-5 accuracy, hot/cold start
+  inference time on an EC2 p2.xlarge GPU server), paper Table 5.
+- NETWORKS: mobile network conditions (paper §3 Fig 7/10: campus WiFi
+  mean input-transfer 63 ms per ~330KB request, 36.83 ms per 172 KB
+  upload; cellular hotspot transfer ~2x WiFi; LTE between, heavier tail).
+- DEVICES: on-device inference times (Fig 5/6, Table 4) for the
+  on-device-vs-cloud comparisons and the T_D bound on T_threshold.
+- MODEL_SIZES: approximate serialized sizes (MB) from the public model
+  zoo files, for the cold/hot memory-budget experiments.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.selection import ModelProfile
+
+# name: (top1, top5, hot_mu, hot_sigma, cold_mu, cold_sigma) [ms]
+TABLE5 = {
+    "squeezenet":          (49.0, 72.9, 28.61, 1.13, 173.38, 25.73),
+    "mobilenetv1_025":     (49.7, 74.1, 25.73, 1.22, 272.81, 45.00),
+    "mobilenetv1_05":      (63.2, 84.9, 26.34, 1.19, 302.77, 45.50),
+    "densenet":            (64.2, 85.6, 49.55, 3.21, 1149.04, 108.00),
+    "mobilenetv1_075":     (68.3, 88.1, 28.02, 1.14, 351.92, 47.38),
+    "mobilenetv1_10":      (71.8, 90.6, 28.15, 1.22, 421.23, 47.14),
+    "nasnet_mobile":       (73.9, 91.5, 55.31, 4.09, 2817.25, 123.73),
+    "inception_resnet_v2": (77.5, 94.0, 76.30, 5.74, 2844.29, 106.49),
+    "inceptionv3":         (77.9, 93.8, 55.75, 1.20, 1950.71, 101.21),
+    "inceptionv4":         (80.1, 95.1, 82.78, 0.89, 3162.24, 133.99),
+    "nasnet_large":        (82.6, 96.1, 112.61, 6.09, 7054.52, 238.36),
+}
+
+MODEL_SIZES_MB = {
+    "squeezenet": 5.0, "mobilenetv1_025": 1.9, "mobilenetv1_05": 5.2,
+    "densenet": 32.6, "mobilenetv1_075": 10.3, "mobilenetv1_10": 16.9,
+    "nasnet_mobile": 21.4, "inception_resnet_v2": 121.0,
+    "inceptionv3": 95.3, "inceptionv4": 170.7, "nasnet_large": 355.3,
+}
+
+# T_input distributions (ms for a ~330KB preprocessed image). Lognormal
+# keeps the positive heavy tail the paper attributes to mobile networks.
+NETWORKS = {
+    "campus_wifi": dict(mean=63.0, std=18.0),
+    "lte": dict(mean=95.0, std=35.0),
+    "cellular_hotspot": dict(mean=126.0, std=60.0),
+    "edge_wired": dict(mean=20.0, std=5.0),
+}
+
+# On-device end-to-end inference (ms), Fig 5/6 & Table 4 (hot model).
+DEVICES = {
+    "pixel2": {"mobilenetv1_025": 133.0, "mobilenetv1_10": 352.0,
+               "inceptionv3": 1910.0},
+    "motox": {"mobilenetv1_025": 210.0},
+    "nexus5_caffe": {"alexnet_equiv": 8910.0},
+}
+
+
+def paper_profiles(subset=None):
+    """ModelProfile list from Table 5 (top-1 accuracy as A(m))."""
+    names = subset or list(TABLE5)
+    out = []
+    for n in names:
+        t1, t5, mu, sg, cmu, csg = TABLE5[n]
+        out.append(ModelProfile(
+            name=n, accuracy=t1 / 100.0, mu=mu, sigma=sg,
+            cold_mu=cmu, cold_sigma=csg,
+            size_bytes=int(MODEL_SIZES_MB[n] * 1e6)))
+    return out
+
+
+def sample_network(name: str, rng: np.random.Generator, n: int = 1):
+    """Sample T_input (ms): lognormal matched to (mean, std)."""
+    d = NETWORKS[name]
+    mean, std = d["mean"], d["std"]
+    var = std ** 2
+    sigma2 = np.log(1.0 + var / mean ** 2)
+    mu = np.log(mean) - sigma2 / 2.0
+    return rng.lognormal(mu, np.sqrt(sigma2), size=n)

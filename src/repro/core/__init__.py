@@ -1,0 +1,24 @@
+"""The paper's primary contribution: CNNSelect — SLA-aware probabilistic
+model selection over a zoo of models with (accuracy, mu, sigma) profiles
+— plus the greedy/static/random/oracle baselines it is evaluated against,
+online performance profiling, and cold/hot model lifecycle management.
+"""
+
+from repro.core.selection import (
+    ModelProfile,
+    SelectionResult,
+    cnnselect,
+    cnnselect_batch,
+    greedy_select,
+    static_select,
+    random_select,
+    oracle_select,
+)
+from repro.core.profiles import OnlineProfile, ProfileStore
+from repro.core.zoo import ModelZoo, ZooEntry
+
+__all__ = [
+    "ModelProfile", "SelectionResult", "cnnselect", "cnnselect_batch",
+    "greedy_select", "static_select", "random_select", "oracle_select",
+    "OnlineProfile", "ProfileStore", "ModelZoo", "ZooEntry",
+]

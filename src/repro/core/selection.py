@@ -1,0 +1,204 @@
+"""CNNSelect (paper §5) and baseline selection policies.
+
+Per request: budget ``T_budget = T_sla - 2*T_input`` and limits
+``T_U = T_budget``, ``T_L = T_U - T_threshold``.
+
+Stage 1 (greedy base): maximize A(m) s.t. mu+sigma < T_U and
+mu-sigma < T_L; infeasible -> fastest model (best-effort fallback).
+
+Stage 2 (exploration set): T_E = T_L +- (|T_L - mu*| + sigma*)
+(the symmetric interval from Fig 11; ``stage2_variant="text"`` gives the
+paper's printed-equation variant — see DESIGN.md §8 fidelity notes);
+M_E = {m : mu(m) in T_E and mu(m)+sigma(m) < T_U} plus the base model.
+
+Stage 3 (probabilistic pick): U(m) = A(m) * (T_U - (mu+sigma)) / |T_L - mu|,
+Pr(m) proportional to U(m) over M_E (clamped to eps > 0; the guards are
+exercised by the hypothesis property tests).
+
+Two implementations, tested for agreement:
+  - `cnnselect`: numpy reference, one request.
+  - `cnnselect_batch`: vectorized jnp over N requests (the 10k-request
+    simulations of §5.2 run through this under jit/vmap).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+_EPS = 1e-9
+
+
+@dataclass(frozen=True)
+class ModelProfile:
+    name: str
+    accuracy: float            # A(m), in [0, 1]
+    mu: float                  # mean inference time (ms)
+    sigma: float               # std of inference time (ms)
+    cold_mu: float = 0.0       # cold-start mean (ms), Table 5
+    cold_sigma: float = 0.0
+    size_bytes: int = 0
+
+
+@dataclass
+class SelectionResult:
+    index: int                 # selected model
+    base_index: int            # stage-1 base model
+    eligible: np.ndarray       # bool (K,), the exploration set M_E
+    probs: np.ndarray          # (K,), zero outside M_E
+    fallback: bool             # stage-1 infeasible -> fastest model
+    t_budget: float
+    t_low: float
+    t_up: float
+
+
+def _limits(t_sla: float, t_input: float, t_threshold: float):
+    t_budget = t_sla - 2.0 * t_input
+    t_up = t_budget
+    t_low = t_up - t_threshold
+    return t_budget, t_low, t_up
+
+
+def cnnselect(profiles: Sequence[ModelProfile], t_sla: float, t_input: float,
+              t_threshold: float, rng: np.random.Generator,
+              stage2_variant: str = "figure") -> SelectionResult:
+    acc = np.array([p.accuracy for p in profiles], dtype=np.float64)
+    mu = np.array([p.mu for p in profiles], dtype=np.float64)
+    sg = np.array([p.sigma for p in profiles], dtype=np.float64)
+    K = len(profiles)
+    t_budget, t_low, t_up = _limits(t_sla, t_input, t_threshold)
+
+    # Stage 1: greedy base model.
+    feasible = (mu + sg < t_up) & (mu - sg < t_low)
+    fallback = not feasible.any()
+    if fallback:
+        base = int(np.argmin(mu))
+    else:
+        # max accuracy; ties -> smaller mu.
+        masked = np.where(feasible, acc, -np.inf)
+        best_acc = masked.max()
+        cands = np.where(masked >= best_acc - 1e-12)[0]
+        base = int(cands[np.argmin(mu[cands])])
+
+    # Stage 2: exploration set.
+    if fallback:
+        eligible = np.zeros(K, dtype=bool)
+        eligible[base] = True
+    else:
+        if stage2_variant == "figure":
+            delta = abs(t_low - mu[base]) + sg[base]
+            lo, hi = t_low - delta, t_low + delta
+        else:  # "text": the paper's printed equation
+            if t_low > mu[base]:
+                lo, hi = mu[base] + sg[base], 2 * t_low - mu[base] + sg[base]
+            else:
+                lo, hi = 2 * t_low - mu[base] + sg[base], mu[base] + sg[base]
+        eligible = (mu >= lo) & (mu <= hi) & (mu + sg < t_up)
+        eligible[base] = True
+
+    # Stage 3: probabilistic pick by utility.
+    util = acc * (t_up - (mu + sg)) / np.maximum(np.abs(t_low - mu), _EPS)
+    util = np.where(eligible, np.maximum(util, _EPS), 0.0)
+    total = util.sum()
+    probs = util / total if total > 0 else eligible / eligible.sum()
+    idx = int(rng.choice(K, p=probs))
+    return SelectionResult(idx, base, eligible, probs, fallback,
+                           t_budget, t_low, t_up)
+
+
+# --------------------------------------------------------------------------
+# Vectorized jnp implementation (N requests at once)
+# --------------------------------------------------------------------------
+
+def cnnselect_batch(mu, sigma, acc, t_sla, t_input, t_threshold, key,
+                    stage2_variant: str = "figure"):
+    """mu/sigma/acc: (K,); t_sla/t_input: (N,); key: PRNGKey.
+    Returns (selected (N,) int32, probs (N,K), base (N,) int32)."""
+    import jax
+    import jax.numpy as jnp
+
+    mu = jnp.asarray(mu, jnp.float32)
+    sg = jnp.asarray(sigma, jnp.float32)
+    acc = jnp.asarray(acc, jnp.float32)
+    t_sla = jnp.asarray(t_sla, jnp.float32)
+    t_input = jnp.asarray(t_input, jnp.float32)
+    K = mu.shape[0]
+
+    t_up = (t_sla - 2.0 * t_input)[:, None]          # (N,1)
+    t_low = t_up - t_threshold
+
+    feasible = (mu + sg < t_up) & (mu - sg < t_low)  # (N,K)
+    any_feas = feasible.any(axis=1)
+    masked_acc = jnp.where(feasible, acc, -jnp.inf)
+    # max accuracy, ties -> smaller mu: lexicographic score.
+    score = masked_acc - 1e-9 * mu
+    base_feas = jnp.argmax(score, axis=1)
+    base_fall = jnp.argmin(mu)
+    base = jnp.where(any_feas, base_feas, base_fall).astype(jnp.int32)
+
+    mu_b = mu[base][:, None]
+    sg_b = sg[base][:, None]
+    if stage2_variant == "figure":
+        delta = jnp.abs(t_low - mu_b) + sg_b
+        lo, hi = t_low - delta, t_low + delta
+    else:
+        hi0 = 2 * t_low - mu_b + sg_b
+        lo0 = mu_b + sg_b
+        swap = t_low <= mu_b
+        lo = jnp.where(swap, hi0, lo0)
+        hi = jnp.where(swap, lo0, hi0)
+    eligible = (mu >= lo) & (mu <= hi) & (mu + sg < t_up)
+    eligible = eligible | jax.nn.one_hot(base, K, dtype=bool)
+    eligible = jnp.where(any_feas[:, None], eligible,
+                         jax.nn.one_hot(base, K, dtype=bool))
+
+    util = acc * (t_up - (mu + sg)) / jnp.maximum(jnp.abs(t_low - mu), _EPS)
+    util = jnp.where(eligible, jnp.maximum(util, _EPS), 0.0)
+    probs = util / jnp.maximum(util.sum(axis=1, keepdims=True), _EPS)
+    # Gumbel-max categorical sampling.
+    g = jax.random.gumbel(key, probs.shape)
+    logp = jnp.where(probs > 0, jnp.log(jnp.maximum(probs, 1e-30)), -jnp.inf)
+    selected = jnp.argmax(logp + g, axis=1).astype(jnp.int32)
+    return selected, probs, base
+
+
+# --------------------------------------------------------------------------
+# Baselines (paper §5.2.2 and standard references)
+# --------------------------------------------------------------------------
+
+def greedy_select(profiles: Sequence[ModelProfile], t_sla: float,
+                  *, t_input: float = 0.0, use_network: bool = False) -> int:
+    """Paper's greedy: the most accurate model whose mean time fits the
+    SLA. It ignores network-time variability (use_network=False) — the
+    key weakness CNNSelect addresses."""
+    budget = t_sla - (2.0 * t_input if use_network else 0.0)
+    acc = np.array([p.accuracy for p in profiles])
+    mu = np.array([p.mu for p in profiles])
+    ok = mu <= budget
+    if not ok.any():
+        return int(np.argmin(mu))
+    masked = np.where(ok, acc, -np.inf)
+    return int(np.argmax(masked))
+
+
+def static_select(profiles: Sequence[ModelProfile], index: int) -> int:
+    return index
+
+
+def random_select(profiles: Sequence[ModelProfile],
+                  rng: np.random.Generator) -> int:
+    return int(rng.integers(len(profiles)))
+
+
+def oracle_select(profiles: Sequence[ModelProfile], t_sla: float,
+                  t_input: float, realized_times: np.ndarray) -> int:
+    """Upper bound: knows each model's realized execution time for this
+    request; picks the most accurate that meets the SLA end-to-end."""
+    acc = np.array([p.accuracy for p in profiles])
+    ok = realized_times + 2.0 * t_input <= t_sla
+    if not ok.any():
+        return int(np.argmin(realized_times))
+    masked = np.where(ok, acc, -np.inf)
+    return int(np.argmax(masked))

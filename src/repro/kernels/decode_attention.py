@@ -1,0 +1,100 @@
+"""Flash-decode Pallas TPU kernel: one query token vs. a (ring-buffer)
+KV cache.
+
+Grid (B, KV, nS) with the cache-block index innermost; the per-(b, kv)
+accumulator covers all `rep = Hq/KV` query heads of the group at once —
+(rep, hd) tiles keep the MXU busy even at rep=1 because hd>=128.
+Validity masking uses the stored position array (slot -> position,
+-1 = unwritten), which makes the same kernel correct for linear and
+ring-buffer (sliding-window) caches.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(cpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref, acc, m_i, l_i, *,
+            scale: float, cap: float, window: int, rep: int, bs: int):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_i[...] = jnp.full_like(m_i, NEG_INF)
+        l_i[...] = jnp.zeros_like(l_i)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale   # (rep, hd)
+    k = k_ref[0, 0].astype(jnp.float32)           # (bs, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    pos = pos_ref[0]                              # (bs,) stored positions
+    cache_pos = cpos_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (rep, bs)
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    valid = (pos >= 0) & (pos <= cache_pos)
+    if window:
+        valid &= pos > cache_pos - window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_i[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_i[...] = l_i[...] * corr + p.sum(axis=1)
+    acc[...] = acc[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_i[...] = m_new
+
+    @pl.when(t == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l_i[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, pos, cache_pos, *, window: int = 0,
+                     softcap: float = 0.0, scale: float | None = None,
+                     block_s: int = 512, interpret: bool = False):
+    """q: (B, Hq, hd); k, v: (B, KV, S, hd); pos: (S,) int32;
+    cache_pos: scalar int32. Returns (B, Hq, hd)."""
+    B, Hq, hd = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    assert Hq % KV == 0
+    rep = Hq // KV
+    bs = min(block_s, S)
+    assert S % bs == 0
+    scale = hd ** -0.5 if scale is None else scale
+    qg = q.reshape(B, KV, rep, hd)
+    cpos = jnp.asarray(cache_pos, jnp.int32).reshape(1)
+
+    kern = functools.partial(_kernel, scale=scale, cap=softcap,
+                             window=window, rep=rep, bs=bs)
+    out = pl.pallas_call(
+        kern,
+        grid=(B, KV, S // bs),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # cache_pos scalar
+            pl.BlockSpec((1, 1, rep, hd), lambda b, g, t: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, g, t: (b, g, t, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, g, t: (b, g, t, 0)),
+            pl.BlockSpec((1, bs), lambda b, g, t: (0, t)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, hd), lambda b, g, t: (b, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, rep, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep, hd), jnp.float32),
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cpos, qg, k, v, pos.reshape(1, S))
+    return out.reshape(B, Hq, hd)

@@ -1,0 +1,119 @@
+"""Flash attention (prefill) Pallas TPU kernel.
+
+Online-softmax over KV blocks: grid (B, Hq, nQ, nK) with the KV-block
+index innermost, so the (bq, hd) accumulator, running max and denominator
+live in VMEM scratch across the inner sweep and the output block is
+flushed once on the last KV step. GQA is folded into the K/V BlockSpec
+index maps (q head h reads kv head h // rep). Causal + sliding-window
+masking is block-skipped: fully-masked KV blocks contribute nothing and
+their compute is gated behind pl.when.
+
+VMEM budget per step (defaults bq=bk=512, hd<=256, fp32 scratch):
+q (512*256*4) + k/v (2*512*256*4) + acc (512*256*4) ~= 2 MiB << 16 MiB
+v5e VMEM; block dims are multiples of (8,128) MXU/VREG tiling.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m_i, l_i, *,
+            scale: float, cap: float, window: int, causal: bool,
+            bq: int, bk: int):
+    j = pl.program_id(2)  # q block
+    t = pl.program_id(3)  # kv block (innermost)
+
+    @pl.when(t == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_i[...] = jnp.full_like(m_i, NEG_INF)
+        l_i[...] = jnp.zeros_like(l_i)
+
+    q_start = j * bq
+    k_start = t * bk
+    # Block-level skip: fully-masked KV blocks are gated off entirely.
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + bq - 1)
+    if window:
+        run = jnp.logical_and(run, k_start + bk - 1 > q_start - window)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale   # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if cap:
+            s = cap * jnp.tanh(s / cap)
+        pos_q = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        pos_k = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= pos_k <= pos_q
+        if window:
+            mask &= pos_k > pos_q - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_i[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_i[...] = l_i[...] * corr + p.sum(axis=1)
+        acc[...] = acc[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_i[...] = m_new
+
+    @pl.when(t == pl.num_programs(3) - 1)
+    def _flush():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l_i[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, window: int = 0, softcap: float = 0.0,
+                    scale: float | None = None, causal: bool = True,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool = False):
+    """q: (B, Hq, T, hd); k, v: (B, KV, S, hd) -> (B, Hq, T, hd)."""
+    B, Hq, T, hd = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    assert Hq % KV == 0, (Hq, KV)
+    rep = Hq // KV
+    bq = min(block_q, T)
+    bk = min(block_k, S)
+    assert T % bq == 0 and S % bk == 0, "pad sequences to block multiples"
+    scale = hd ** -0.5 if scale is None else scale
+    grid = (B, Hq, T // bq, S // bk)
+
+    kern = functools.partial(
+        _kernel, scale=scale, cap=softcap, window=window, causal=causal,
+        bq=bq, bk=bk)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, j, t: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, j, t, rep=rep: (b, h // rep, t, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, j, t, rep=rep: (b, h // rep, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, j, t: (b, h, j, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,61 @@
+"""int8-weight matmul Pallas TPU kernel (paper Fig 6: 8-bit post-training
+quantization, adapted to TPU serving).
+
+C[M,N] = X[M,K] @ (Wq[K,N] * scale[N])   with Wq int8, per-output-channel
+fp32 scales. Grid (nM, nN, nK), K innermost: the fp32 accumulator tile
+stays in VMEM across the K sweep; scales are applied ONCE per output tile
+at flush (not per K block), so the MXU consumes the int8 weights
+directly after an on-chip convert. Tiles default to (256, 256, 512) —
+multiples of the 128x128 MXU and int8-friendly (the Wq block is
+512*256 = 128 KiB).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, s_ref, o_ref, acc):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)   # int8 -> f32 on-chip
+    acc[...] += jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+
+    @pl.when(t == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = (acc[...] * s_ref[0]).astype(o_ref.dtype)
+
+
+def int8_matmul(x, w_q, w_scale, *, block_m: int = 256, block_n: int = 256,
+                block_k: int = 512, interpret: bool = False):
+    """x: (M, K) float; w_q: (K, N) int8; w_scale: (N,) f32 -> (M, N)."""
+    M, K = x.shape
+    K2, N = w_q.shape
+    assert K == K2
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, \
+        "pad operands to block multiples"
+    return pl.pallas_call(
+        _kernel,
+        grid=(M // bm, N // bn, K // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, t: (i, t)),
+            pl.BlockSpec((bk, bn), lambda i, j, t: (t, j)),
+            pl.BlockSpec((1, bn), lambda i, j, t: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w_q, w_scale.reshape(1, N))

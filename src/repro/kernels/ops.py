@@ -1,0 +1,93 @@
+"""jit'd wrappers: shape checking, padding to block multiples, and the
+model-facing entry point used when `cfg.attn_impl == "pallas"`.
+
+On this CPU container the kernels run in interpret mode
+(`REPRO_PALLAS_INTERPRET=1`, set by tests); on real TPU the same calls
+compile to Mosaic."""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.int8_matmul import int8_matmul as _int8mm
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1" or \
+        jax.devices()[0].platform == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "scale",
+                                             "block_q", "block_k"))
+def flash_attention_btHd(q, k, v, *, window=0, softcap=0.0, scale=None,
+                         block_q=512, block_k=512):
+    """Model-layout wrapper: q (B,T,H,hd), k/v (B,S,KV,hd) — transposes to
+    the kernel's (B,H,T,hd) layout and pads T/S to block multiples."""
+    B, T, H, hd = q.shape
+    S = k.shape[1]
+    bq = min(block_q, max(T, 1))
+    bk = min(block_k, max(S, 1))
+    pad_q = (-T) % bq
+    pad_k = (-S) % bk
+    qt = jnp.moveaxis(q, 2, 1)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    out = _flash(qt, kt, vt, window=window, softcap=softcap, scale=scale,
+                 block_q=bq, block_k=bk, interpret=_interpret())
+    out = out[:, :, :T]
+    return jnp.moveaxis(out, 1, 2)
+
+
+def flash_attention(q, k, v, pos_q, pos_k, *, window=0, softcap=0.0,
+                    scale=None):
+    """Entry point matching repro.models.layers.attention's signature
+    (prefill path: positions are 0..T-1)."""
+    return flash_attention_btHd(q, k, v, window=window, softcap=softcap,
+                                scale=scale)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "scale",
+                                             "block_s"))
+def decode_attention(q, k, v, pos, cache_pos, *, window=0, softcap=0.0,
+                     scale=None, block_s=512):
+    """q: (B,1,H,hd) or (B,H,hd); k/v: (B,S,KV,hd) model layout."""
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    S = kt.shape[2]
+    bs = min(block_s, S)
+    pad = (-S) % bs
+    if pad:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        pos = jnp.pad(pos, (0, pad), constant_values=-1)
+    out = _decode(q, kt, vt, pos, cache_pos, window=window, softcap=softcap,
+                  scale=scale, block_s=bs, interpret=_interpret())
+    return out[:, None] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def int8_matmul(x, w_q, w_scale, *, block_m=256, block_n=256, block_k=512):
+    M, K = x.shape
+    N = w_q.shape[1]
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
+    xp = jnp.pad(x, ((0, pm), (0, pk))) if (pm or pk) else x
+    wp = jnp.pad(w_q, ((0, pk), (0, pn))) if (pk or pn) else w_q
+    sp = jnp.pad(w_scale, (0, pn)) if pn else w_scale
+    out = _int8mm(xp, wp, sp, block_m=bm, block_n=bn, block_k=bk,
+                  interpret=_interpret())
+    return out[:M, :N]

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every kernel (the ground truth in kernel tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softcap(x, cap: float):
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+def flash_attention_ref(q, k, v, *, window: int = 0, cap: float = 0.0,
+                        scale: float | None = None, causal: bool = True):
+    """q: (B, Hq, T, hd); k, v: (B, KV, S, hd). Positions are implicit
+    (q position i == kv position i). Returns (B, Hq, T, hd) in q.dtype."""
+    B, Hq, T, hd = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    rep = Hq // KV
+    scale = hd ** -0.5 if scale is None else scale
+    qg = q.reshape(B, KV, rep, T, hd).astype(jnp.float32) * scale
+    logits = jnp.einsum("bgrth,bgsh->bgrts", qg, k.astype(jnp.float32))
+    logits = softcap(logits, cap)
+    pos_q = jnp.arange(T)[:, None]
+    pos_k = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= pos_k <= pos_q
+    if window:
+        mask &= pos_k > pos_q - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrts,bgsh->bgrth", p, v.astype(jnp.float32))
+    return out.reshape(B, Hq, T, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, pos, cache_pos, *, cap: float = 0.0,
+                         scale: float | None = None, window: int = 0):
+    """q: (B, Hq, hd); k, v: (B, KV, S, hd); pos: (S,) stored positions
+    (-1 = unwritten); cache_pos: scalar current position. (B, Hq, hd)."""
+    B, Hq, hd = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    rep = Hq // KV
+    scale = hd ** -0.5 if scale is None else scale
+    qg = q.reshape(B, KV, rep, hd).astype(jnp.float32) * scale
+    logits = jnp.einsum("bgrh,bgsh->bgrs", qg, k.astype(jnp.float32))
+    logits = softcap(logits, cap)
+    valid = (pos >= 0) & (pos <= cache_pos)
+    if window:
+        valid &= pos > cache_pos - window
+    logits = jnp.where(valid[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrs,bgsh->bgrh", p, v.astype(jnp.float32))
+    return out.reshape(B, Hq, hd).astype(q.dtype)
+
+
+def int8_matmul_ref(x, w_q, w_scale):
+    """x: (M, K) float; w_q: (K, N) int8; w_scale: (1, N) or (N,) f32."""
+    w = w_q.astype(jnp.float32) * w_scale.reshape(1, -1)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)

@@ -1,0 +1,353 @@
+"""Post-SPMD HLO text analysis for the roofline.
+
+`compiled.cost_analysis()` counts while-loop bodies ONCE (verified
+empirically on this jax/XLA build), so scanned-layer programs would be
+under-counted by ~n_layers. This module parses `compiled.as_text()`
+itself and multiplies every computation's costs by the product of
+enclosing while-loop trip counts (XLA annotates
+`known_trip_count={"n":...}` after compilation).
+
+Outputs (all PER DEVICE — the SPMD module is the per-device program):
+  - dot_flops: 2*M*N*K over all dot ops (MXU work; elementwise VPU work
+    excluded by design, stated in EXPERIMENTS.md)
+  - traffic_bytes: operand+output bytes of top-level fusion/dot/scatter/
+    gather/... ops — an HBM traffic model (fusions are XLA's units of
+    memory residency)
+  - collective_traffic: per-kind bytes with a ring-traffic model
+    (AR: 2x operand, AG: output, RS: operand, A2A/CP: operand)
+  - collective_operand_bytes: the assignment's literal "sum of operand
+    sizes" number, reported alongside
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# HBM-traffic-relevant top-level opcodes (fusion bodies are on-chip).
+TRAFFIC_OPS = {"fusion", "dot", "scatter", "gather", "dynamic-slice",
+               "dynamic-update-slice", "reduce", "reduce-window",
+               "select-and-scatter", "convolution", "concatenate",
+               "slice", "pad", "sort"} | set(COLLECTIVES)
+
+# Pure layout/dtype plumbing: free on TPU (folded into surrounding ops) or
+# CPU-backend artifacts (bf16<->f32 converts around dots).
+LAYOUT_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+              "bitcast", "copy", "convert", "transpose", "reshape",
+              "broadcast", "iota", "select", "compare", "slice", "pad"}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<rest>.+)$")
+# Result type: tuple "(...)" (no nested parens in HLO types; may contain
+# /*index=k*/ comments) or plain "dtype[dims]{layout}".
+_OP_RE = re.compile(r"^(?P<type>\([^()]*\)|\w+\[[\d,]*\](?:\{[^}]*\})?)\s+"
+                    r"(?P<op>[\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[\w.\-]+)\s*\(")
+
+
+def shape_bytes(type_str: str, cap_elem_bytes: int = 0) -> int:
+    """Bytes of a type. cap_elem_bytes>0 caps the element width — used to
+    model TPU-width (bf16) traffic when XLA-CPU upcasts dot inputs to f32
+    (the CPU backend has no bf16 ALU; those converts and f32 shadow
+    buffers would not exist on the TPU target)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        eb = DTYPE_BYTES[dt]
+        if cap_elem_bytes and eb > cap_elem_bytes and dt.startswith(("f", "bf")):
+            eb = cap_elem_bytes
+        total += n * eb
+    return total
+
+
+def shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+@dataclass
+class Instr:
+    name: str
+    op: str
+    type_str: str
+    arg_str: str       # inside the parens
+    attr_str: str      # after the closing paren
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    table: Dict[str, str] = field(default_factory=dict)  # name -> type_str
+
+
+def _split_args(rest: str) -> Tuple[str, str]:
+    """Split 'op(args...), attrs' at the matching close paren."""
+    i = rest.find("(")
+    depth = 0
+    for j in range(i, len(rest)):
+        if rest[j] == "(":
+            depth += 1
+        elif rest[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[i + 1:j], rest[j + 1:]
+    return rest[i + 1:], ""
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" ") and line.rstrip().endswith("{"):
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur = Computation(m.group("name"))
+                comps[cur.name] = cur
+                if line.strip().startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if line.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        rest = m.group("rest")
+        om = _OP_RE.match(rest)
+        if not om:
+            continue
+        type_str, op = om.group("type"), om.group("op")
+        arg_str, attr_str = _split_args(rest[om.start(2):])
+        ins = Instr(m.group("name"), op, type_str, arg_str, attr_str)
+        ins.operands = re.findall(r"%([\w.\-]+)", arg_str)
+        cur.instrs.append(ins)
+        cur.table[ins.name] = type_str
+    return comps, entry
+
+
+def while_multipliers(comps: Dict[str, Computation], entry: str,
+                      default_trip: int = 1) -> Dict[str, float]:
+    """Multiplier per computation = product of enclosing while trip counts."""
+    mult: Dict[str, float] = {entry: 1.0}
+    stack = [entry]
+    seen = set()
+    while stack:
+        cname = stack.pop()
+        if cname in seen or cname not in comps:
+            continue
+        seen.add(cname)
+        m = mult.get(cname, 1.0)
+        for ins in comps[cname].instrs:
+            children = re.findall(
+                r"(?:body|condition|to_apply|calls)=\{?%?([\w.\-]+)",
+                ins.attr_str)
+            # fusion/call instructions may list calls={%a, %b}
+            child_m = m
+            if ins.op == "while":
+                tm = re.search(r'known_trip_count[^0-9]*?(\d+)', ins.attr_str)
+                trip = int(tm.group(1)) if tm else default_trip
+                child_m = m * trip
+            for ch in children:
+                mult[ch] = max(mult.get(ch, 0.0), child_m)
+                stack.append(ch)
+    return mult
+
+
+def _operand_bytes(comp: Computation, ins: Instr) -> int:
+    total = 0
+    for op_name in ins.operands:
+        t = comp.table.get(op_name)
+        if t:
+            total += shape_bytes(t)
+    return total
+
+
+def _nth_operand_bytes(comp: Computation, ins: Instr, n: int,
+                       cap: int = 0) -> int:
+    if n < len(ins.operands):
+        t = comp.table.get(ins.operands[n])
+        if t:
+            return shape_bytes(t, cap)
+    return 0
+
+
+def _operand_bytes_capped(comp: Computation, ins: Instr, cap: int) -> int:
+    total = 0
+    for op_name in ins.operands:
+        t = comp.table.get(op_name)
+        if t:
+            total += shape_bytes(t, cap)
+    return total
+
+
+def _instr_traffic(comp: Computation, ins: Instr,
+                   comps: Dict[str, Computation], cap: int) -> float:
+    """HBM traffic model for one top-level instruction (TPU-width capped).
+
+    In-place ops (dynamic-update-slice, scatter) move only the update
+    region; slices/gathers only the extracted region. Fusions: bodies
+    with in-place updates move 2x the update sizes (XLA aliases the big
+    target); layout-only fusions are free; arithmetic fusions move
+    operands + outputs."""
+    op = ins.op
+    if op == "dynamic-update-slice":
+        return 2.0 * _nth_operand_bytes(comp, ins, 1, cap)
+    if op in ("dynamic-slice", "gather", "slice"):
+        return 2.0 * shape_bytes(ins.type_str, cap)
+    if op == "scatter":
+        return 2.0 * _nth_operand_bytes(comp, ins, 2, cap)
+    if op == "fusion":
+        cm = re.search(r"calls=\{?%?([\w.\-]+)", ins.attr_str)
+        body = comps.get(cm.group(1)) if cm else None
+        if body is not None:
+            dus_bytes = 0.0
+            arithmetic = False
+            has_ds = False
+            for bi in body.instrs:
+                if bi.op == "dynamic-update-slice":
+                    dus_bytes += 2.0 * _nth_operand_bytes(body, bi, 1, cap)
+                elif bi.op == "scatter":
+                    dus_bytes += 2.0 * _nth_operand_bytes(body, bi, 2, cap)
+                elif bi.op == "dynamic-slice":
+                    has_ds = True
+                elif bi.op not in LAYOUT_OPS:
+                    arithmetic = True
+            if dus_bytes:
+                return dus_bytes
+            if not arithmetic and not has_ds:
+                return 0.0  # pure layout/dtype-plumbing fusion (CPU artifact)
+            outb = shape_bytes(ins.type_str, cap)
+            if has_ds:
+                # Slice-extracting fusion: large operands are *indexed*,
+                # not fully read — charging the whole carried KV cache per
+                # layer inflated decode memory terms ~50x (analyzer
+                # iteration, EXPERIMENTS.md §Perf).
+                opb = 0
+                for name in ins.operands:
+                    t = comp.table.get(name)
+                    if t:
+                        opb += min(shape_bytes(t, cap), outb)
+                return outb + opb
+        return (shape_bytes(ins.type_str, cap)
+                + _operand_bytes_capped(comp, ins, cap))
+    return (shape_bytes(ins.type_str, cap)
+            + _operand_bytes_capped(comp, ins, cap))
+
+
+def control_flow_comps(comps: Dict[str, Computation], entry: str) -> set:
+    """Entry + while bodies/conditions — the computations whose top-level
+    instructions are the units of HBM residency. Fusion/reduce callees'
+    costs are attributed at their call sites."""
+    out = {entry}
+    stack = [entry]
+    while stack:
+        cname = stack.pop()
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            if ins.op == "while":
+                for ch in re.findall(r"(?:body|condition)=\{?%?([\w.\-]+)",
+                                     ins.attr_str):
+                    if ch not in out:
+                        out.add(ch)
+                        stack.append(ch)
+    return out
+
+
+def analyze(text: str, default_trip: int = 1,
+            compute_elem_bytes: int = 2) -> dict:
+    """compute_elem_bytes: TPU execution width cap for float traffic
+    (2 = bf16); set 0 to disable capping."""
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    mult = while_multipliers(comps, entry, default_trip)
+    cf_comps = control_flow_comps(comps, entry)
+    cap = compute_elem_bytes
+
+    dot_flops = 0.0
+    traffic = 0.0
+    coll_traffic: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    coll_operand: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    coll_count = 0
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        in_cf = cname in cf_comps
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                out_elems = 1
+                for _, dims in shape_dims(ins.type_str):
+                    for d in dims:
+                        out_elems *= d
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}",
+                               ins.attr_str)
+                k = 1
+                if cm and ins.operands:
+                    lhs_t = comp.table.get(ins.operands[0])
+                    if lhs_t:
+                        dims = shape_dims(lhs_t)[0][1]
+                        for ci in cm.group(1).split(","):
+                            if ci:
+                                k *= dims[int(ci)]
+                dot_flops += m * 2.0 * out_elems * k
+                if not in_cf:
+                    # dot inside a fusion body: its traffic is not seen at
+                    # the control-flow level; add it here.
+                    traffic += m * (shape_bytes(ins.type_str, cap)
+                                    + _operand_bytes_capped(comp, ins, cap))
+            if in_cf and ins.op in TRAFFIC_OPS:
+                traffic += m * _instr_traffic(comp, ins, comps, cap)
+            for kind in COLLECTIVES:
+                if ins.op == kind or ins.op.startswith(kind + "-start"):
+                    ob = _operand_bytes_capped(comp, ins, cap)
+                    outb = shape_bytes(ins.type_str, cap)
+                    coll_operand[kind] += m * ob
+                    if kind == "all-reduce":
+                        coll_traffic[kind] += m * 2.0 * ob
+                    elif kind == "all-gather":
+                        coll_traffic[kind] += m * outb
+                    else:
+                        coll_traffic[kind] += m * ob
+                    coll_count += int(m)
+                    break
+
+    return {
+        "dot_flops": dot_flops,
+        "traffic_bytes": traffic,
+        "collective_traffic": coll_traffic,
+        "collective_traffic_total": sum(coll_traffic.values()),
+        "collective_operand_bytes": coll_operand,
+        "collective_operand_total": sum(coll_operand.values()),
+        "collective_count": coll_count,
+    }

@@ -1,0 +1,24 @@
+"""Composable model substrate: configs, layers, parameter trees, forward passes."""
+
+from repro.models.config import ModelConfig, MoEConfig, SSDConfig, RGLRUConfig
+from repro.models.model import (
+    init_params,
+    forward,
+    init_cache,
+    decode_step,
+    param_logical_axes,
+    cache_logical_axes,
+)
+
+__all__ = [
+    "ModelConfig",
+    "MoEConfig",
+    "SSDConfig",
+    "RGLRUConfig",
+    "init_params",
+    "forward",
+    "init_cache",
+    "decode_step",
+    "param_logical_axes",
+    "cache_logical_axes",
+]

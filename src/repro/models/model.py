@@ -1,0 +1,317 @@
+"""Composable decoder LM covering all assigned architectures.
+
+A model is `n_layers` blocks produced by cycling `cfg.pattern`. Layers
+are grouped for `lax.scan` (one group = one pass through the pattern);
+`n_layers % len(pattern)` tail layers are unrolled. KV/recurrent caches
+thread through the scan as stacked xs/ys.
+
+Entry points:
+  forward(params, inputs, cfg)                      -> (logits, aux)
+  forward(..., cache=init_cache(...), positions)    -> prefill: also fills cache
+  decode_step(params, token, cache, cache_pos, cfg) -> (logits, new_cache)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import params as pmod
+from repro.models.config import ModelConfig, ATTN_KINDS
+from repro.models.layers import attn_block, rms_norm, softcap
+from repro.models.moe import moe_block_ffn
+from repro.models.rglru import rglru_block
+from repro.models.ssd import ssd_block
+from repro.utils import dtype_of
+
+init_params = pmod.init_params
+param_logical_axes = pmod.param_logical_axes
+abstract_params = pmod.abstract_params
+
+
+# --------------------------------------------------------------------------
+# Cache construction (same mk-callback trick as params.py)
+# --------------------------------------------------------------------------
+
+def _block_cache_tree(cfg: ModelConfig, kind: str, B: int, max_seq: int, mk):
+    if kind in ATTN_KINDS:
+        S = min(cfg.window, max_seq) if kind == "local" and cfg.window else max_seq
+        KV, hd = cfg.n_kv_heads, cfg.head_dim
+        return {
+            "k": mk((B, S, KV, hd), ("cache_batch", "cache_seq", "kv_heads", "head_dim"),
+                    cfg.compute_dtype, "zeros"),
+            "v": mk((B, S, KV, hd), ("cache_batch", "cache_seq", "kv_heads", "head_dim"),
+                    cfg.compute_dtype, "zeros"),
+            "pos": mk((S,), ("cache_seq",), "int32", "neg_ones"),
+        }
+    if kind == "rglru":
+        W, K = cfg.lru_width, cfg.rglru.conv_width
+        return {
+            "h": mk((B, W), ("cache_batch", "rnn_width"), "float32", "zeros"),
+            "conv": mk((B, K - 1, W), ("cache_batch", "conv_k", "rnn_width"),
+                       cfg.compute_dtype, "zeros"),
+        }
+    if kind == "ssd":
+        s = cfg.ssd
+        nh, N, P = cfg.ssd_heads, s.d_state, s.head_dim
+        di, gn, K = cfg.d_inner_ssd, s.n_groups * s.d_state, s.conv_width
+        return {
+            "S": mk((B, nh, N, P), ("cache_batch", "ssd_heads", "ssd_state", "ssd_hd"),
+                    "float32", "zeros"),
+            "conv": {
+                "x": mk((B, K - 1, di), ("cache_batch", "conv_k", "ssd_inner"),
+                        cfg.compute_dtype, "zeros"),
+                "B": mk((B, K - 1, gn), ("cache_batch", "conv_k", "ssd_gn"),
+                        cfg.compute_dtype, "zeros"),
+                "C": mk((B, K - 1, gn), ("cache_batch", "conv_k", "ssd_gn"),
+                        cfg.compute_dtype, "zeros"),
+            },
+        }
+    raise ValueError(kind)
+
+
+def _cache_tree(cfg: ModelConfig, B: int, max_seq: int, mk, mk_stacked):
+    G = cfg.n_groups_scan
+    blocks = []
+    for kind in cfg.pattern:
+        smk = lambda shape, axes, dt, init: mk_stacked(shape, axes, dt, init, G)
+        blocks.append(_block_cache_tree(cfg, kind, B, max_seq, smk))
+    tail = tuple(_block_cache_tree(cfg, kind, B, max_seq, mk)
+                 for kind in cfg.tail_kinds)
+    return {"blocks": tuple(blocks), "tail": tail}
+
+
+def _mk_concrete(shape, axes, dt, init):
+    dtype = jnp.int32 if dt == "int32" else dtype_of(dt)
+    if init == "neg_ones":
+        return -jnp.ones(shape, dtype)
+    return jnp.zeros(shape, dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    mk = _mk_concrete
+    mk_stacked = lambda shape, axes, dt, init, n: _mk_concrete(
+        (n,) + shape, axes, dt, init)
+    return _cache_tree(cfg, batch, max_seq, mk, mk_stacked)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    mk = lambda shape, axes, dt, init: jax.ShapeDtypeStruct(
+        shape, jnp.int32 if dt == "int32" else dtype_of(dt))
+    mk_stacked = lambda shape, axes, dt, init, n: jax.ShapeDtypeStruct(
+        (n,) + shape, jnp.int32 if dt == "int32" else dtype_of(dt))
+    return _cache_tree(cfg, batch, max_seq, mk, mk_stacked)
+
+
+def cache_logical_axes(cfg: ModelConfig, batch: int = 1, max_seq: int = 8):
+    mk = lambda shape, axes, dt, init: axes
+    mk_stacked = lambda shape, axes, dt, init, n: ("layers",) + axes
+    return _cache_tree(cfg, batch, max_seq, mk, mk_stacked)
+
+
+# --------------------------------------------------------------------------
+# Block dispatch
+# --------------------------------------------------------------------------
+
+def _apply_block(kind: str, p, x, cfg: ModelConfig, positions, cache,
+                 cache_pos, parallel, constrain=None):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "global", "local"):
+        x, nc = attn_block(p, x, cfg, kind, positions, cache, cache_pos,
+                           constrain, parallel)
+        return x, nc, aux
+    if kind == "moe":
+        x, nc = attn_block(p, x, cfg, kind, positions, cache, cache_pos,
+                           constrain, parallel)
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        out, aux = moe_block_ffn(p, h, cfg, parallel)
+        if cfg.sandwich_norm:
+            out = rms_norm(out, p["post_ffn_norm"], cfg.norm_eps)
+        if constrain is not None:
+            # T-shard BEFORE naming so the saved residual is 1/tp-sized.
+            out = constrain(out)
+        if cfg.remat == "moe_save":
+            from jax.ad_checkpoint import checkpoint_name
+            out = checkpoint_name(out, "moe_out")
+        x = x + out
+        if constrain is not None:
+            x = constrain(x)
+        return x, nc, aux
+    if kind == "rglru":
+        x, nc = rglru_block(p, x, cfg, cache)
+        if constrain is not None:
+            x = constrain(x)
+        return x, nc, aux
+    if kind == "ssd":
+        x, nc = ssd_block(p, x, cfg, cache, parallel)
+        if constrain is not None:
+            x = constrain(x)
+        return x, nc, aux
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# Forward / decode
+# --------------------------------------------------------------------------
+
+def forward(params, inputs, cfg: ModelConfig, *, parallel=None,
+            cache=None, cache_pos=None, positions=None,
+            logits_last_only: bool = False):
+    """inputs: (B,T) int tokens or (B,T,d) embeddings (frontend stubs).
+
+    cache=None: plain forward. cache given & T>1: prefill (fills cache).
+    logits_last_only: unembed only the final position (serving prefill —
+    avoids materializing the (B,S,V) logits tensor).
+    Returns (logits, {"aux_loss", "cache"}).
+    """
+    compute_dtype = dtype_of(cfg.compute_dtype)
+    if cfg.input_mode == "embeddings":
+        x = inputs.astype(compute_dtype)
+    else:
+        x = jnp.take(params["embed"], inputs, axis=0).astype(compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), compute_dtype)
+    B, T = x.shape[0], x.shape[1]
+    if positions is None:
+        positions = jnp.arange(T, dtype=jnp.int32)
+    if cache_pos is None:
+        cache_pos = jnp.zeros((), jnp.int32)
+
+    # Megatron-style sequence parallelism: the residual stream stays
+    # sharded over (batch x seq); applied after EVERY residual add so
+    # GSPMD converts each row-parallel all-reduce into a reduce-scatter
+    # and the scanned carry stays 1/tp-sized (§Perf iteration 3).
+    constrain = None
+    entry_constrain = None
+    if parallel is not None and parallel.seq_shard and T > 1:
+        from jax.sharding import PartitionSpec as P
+        res_spec = P(parallel.data_axes, parallel.tp_axis, None)
+        rep_spec = P(parallel.data_axes, None, None)
+
+        def _tshard(h):
+            return jax.lax.with_sharding_constraint(h, res_spec)
+
+        if getattr(parallel, "seq_mode", "full") == "carry":
+            # Only the scan carry stays T-sharded; inside a group x is
+            # explicitly gathered to model-replicated so qkv runs
+            # head-sharded (otherwise GSPMD gathers the small weights and
+            # replicates attention over the model axis — §Perf).
+            def entry_constrain(h):
+                return jax.lax.with_sharding_constraint(h, rep_spec)
+            exit_constrain = _tshard
+        else:
+            constrain = _tshard
+            exit_constrain = None
+
+    def apply_group(x, aux, bps, bcs):
+        if entry_constrain is not None:
+            x = entry_constrain(x)
+        elif constrain is not None:
+            x = constrain(x)
+        new_caches = []
+        for i, kind in enumerate(cfg.pattern):
+            c = None if bcs is None else bcs[i]
+            x, nc, a = _apply_block(kind, bps[i], x, cfg, positions, c,
+                                    cache_pos, parallel, constrain)
+            new_caches.append(nc)
+            aux = aux + a
+        if entry_constrain is not None:
+            x = exit_constrain(x)  # reduce-scatter back into the carry
+        return x, aux, tuple(new_caches)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    bcaches = cache["blocks"] if cache is not None else None
+    if cfg.n_groups_scan > 0:
+        if bcaches is None:
+            # No cache: scan over stacked params only.
+            def body_nc(carry, bps):
+                x, aux = carry
+                x, aux, _ = apply_group(x, aux, bps, None)
+                return (x, aux), None
+
+            if cfg.remat == "block":
+                body_nc = jax.checkpoint(body_nc)
+            elif cfg.remat == "moe_save":
+                # Like "block" but the (T-sharded) MoE outputs are saved:
+                # the backward recompute then skips the expert FFN and its
+                # weight-gather + combine collectives (§Perf, qwen3 train).
+                body_nc = jax.checkpoint(
+                    body_nc,
+                    policy=jax.checkpoint_policies.save_only_these_names(
+                        "moe_out"))
+            (x, aux), _ = jax.lax.scan(body_nc, (x, aux0), params["blocks"])
+            new_bcache = None
+        else:
+            # Cache is CARRIED (not scanned xs/ys): the stacked cache
+            # buffers live in the loop carry and are updated in place via
+            # dynamic_update_index_in_dim — scanned ys would force XLA to
+            # double-buffer the (layers, B, S, KV, hd) arrays.
+            def body_c(carry, bps):
+                x, aux, caches, i = carry
+                bcs = jax.tree.map(
+                    lambda c: jax.lax.dynamic_index_in_dim(c, i, 0,
+                                                           keepdims=False),
+                    caches)
+                x, aux, ncs = apply_group(x, aux, bps, bcs)
+                caches = jax.tree.map(
+                    lambda c, nc: jax.lax.dynamic_update_index_in_dim(
+                        c, nc.astype(c.dtype), i, 0), caches, ncs)
+                return (x, aux, caches, i + 1), None
+
+            if cfg.remat == "block":
+                body_c = jax.checkpoint(body_c)
+            (x, aux, new_bcache, _), _ = jax.lax.scan(
+                body_c, (x, aux0, bcaches, jnp.zeros((), jnp.int32)),
+                params["blocks"])
+    else:
+        aux = aux0
+        new_bcache = bcaches
+
+    new_tail = []
+    tcaches = cache["tail"] if cache is not None else None
+    for i, kind in enumerate(cfg.tail_kinds):
+        c = None if tcaches is None else tcaches[i]
+        x, nc, a = _apply_block(kind, params["tail"][i], x, cfg, positions, c,
+                                cache_pos, parallel)
+        new_tail.append(nc)
+        aux = aux + a
+
+    if logits_last_only:
+        x = x[:, -1:]
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("btd,vd->btv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("btd,dv->btv", x, params["lm_head"].astype(x.dtype))
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"blocks": new_bcache, "tail": tuple(new_tail)}
+    return logits, {"aux_loss": aux, "cache": new_cache}
+
+
+def decode_step(params, token, cache, cache_pos, cfg: ModelConfig, *,
+                parallel=None):
+    """One decode step. token: (B,1) int32 (or (B,1,d) embeddings);
+    cache_pos: scalar int32 = number of tokens already in context.
+    Returns (logits (B,1,V), new_cache)."""
+    positions = cache_pos[None].astype(jnp.int32)
+    logits, extras = forward(params, token, cfg, parallel=parallel,
+                             cache=cache, cache_pos=cache_pos,
+                             positions=positions)
+    return logits, extras["cache"]
+
+
+def prefill(params, inputs, cfg: ModelConfig, max_seq: int, *, parallel=None,
+            logits_last_only: bool = False):
+    """Full-sequence prefill: returns (logits, cache ready for decoding)."""
+    B, T = inputs.shape[0], inputs.shape[1]
+    cache = init_cache(cfg, B, max_seq)
+    logits, extras = forward(params, inputs, cfg, parallel=parallel,
+                             cache=cache,
+                             positions=jnp.arange(T, dtype=jnp.int32),
+                             logits_last_only=logits_last_only)
+    return logits, extras["cache"]

@@ -1,0 +1,100 @@
+"""RecurrentGemma block: temporal conv + RG-LRU linear recurrence.
+
+Recurrence (Griffin, arXiv:2402.19427):
+    r_t = sigmoid(x_t W_a + b_a)            (recurrence gate)
+    i_t = sigmoid(x_t W_x + b_x)            (input gate)
+    log a_t = -c * softplus(Lambda) * r_t   (per-channel decay)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Sequence mode uses `lax.associative_scan` over (a, b) pairs — a linear
+recurrence composes associatively: (a2, b2) o (a1, b1) = (a1*a2, a2*b1+b2).
+Decode mode is the O(1) single-step update.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm, mlp, act_fn
+
+
+def _gates(p, x, cfg: ModelConfig):
+    c = cfg.rglru.c
+    r = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", x, p["w_a"]) + p["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", x, p["w_x"]) + p["b_x"])
+    log_a = -c * jax.nn.softplus(p["lam"]) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated_x = i * x
+    # sqrt(1 - a^2) normalizer, computed stably in fp32.
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = (beta * gated_x.astype(jnp.float32))
+    return a, b
+
+
+def rglru_scan(p, x, cfg: ModelConfig, h0=None):
+    """x: (B,T,W). Returns (y, h_last). Associative-scan linear recurrence."""
+    a, b = _gates(p, x, cfg)
+    if h0 is not None:
+        # Fold the incoming state into the first step: b_0 += a_0 * h0.
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(p, x, cfg: ModelConfig, h):
+    """x: (B,1,W); h: (B,W) fp32 state. Returns (y, h_new)."""
+    a, b = _gates(p, x, cfg)
+    h_new = a[:, 0] * h + b[:, 0]
+    return h_new[:, None].astype(x.dtype), h_new
+
+
+def causal_conv1d(w, x, state=None):
+    """Depthwise causal conv. x: (B,T,C); w: (C,K). state: (B,K-1,C) prior
+    inputs for decode. Returns (y, new_state)."""
+    K = w.shape[1]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, T+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[:, i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else pad
+    return y, new_state
+
+
+def rglru_block(p, x, cfg: ModelConfig, cache=None):
+    """Full recurrentgemma residual block (mixer + MLP).
+
+    cache: None (sequence mode) or {"h": (B,W) fp32, "conv": (B,K-1,W)}.
+    Returns (x_out, new_cache).
+    """
+    eps = cfg.norm_eps
+    h = rms_norm(x, p["ln1"], eps)
+    gate = act_fn("gelu")(jnp.einsum("btd,dw->btw", h, p["w_gate_branch"]))
+    u = jnp.einsum("btd,dw->btw", h, p["w_in"])
+    if cache is None:
+        u, _ = causal_conv1d(p["conv_w"], u)
+        y, _ = rglru_scan(p, u, cfg)
+        new_cache = None
+    elif x.shape[1] == 1:  # decode
+        u, conv_state = causal_conv1d(p["conv_w"], u, cache["conv"])
+        y, h_last = rglru_step(p, u, cfg, cache["h"])
+        new_cache = {"h": h_last, "conv": conv_state}
+    else:  # prefill: run the sequence scan, emit the final state
+        u, conv_state = causal_conv1d(p["conv_w"], u)
+        y, h_last = rglru_scan(p, u, cfg)
+        new_cache = {"h": h_last, "conv": conv_state}
+    out = jnp.einsum("btw,wd->btd", y * gate, p["w_out"])
+    x = x + out
+
+    h = rms_norm(x, p["ln2"], eps)
+    x = x + mlp(p["mlp"], h, cfg)
+    return x, new_cache

@@ -1,0 +1,173 @@
+"""Mamba2 SSD (state-space duality) mixer, chunked.
+
+Recurrence per head h with state S in R^{N x P}:
+    S_t = a_t * S_{t-1} + B_t (x_t dt_t)^T        a_t = exp(dt_t * A_h)
+    y_t = C_t^T S_t + D_h * x_t
+
+Sequence mode uses the chunked SSD algorithm (arXiv:2405.21060): a scan
+over chunks of length Q carrying the running state; within a chunk the
+quadratic (Q x Q) form runs on the MXU. Decode mode is the O(1) update.
+
+Shapes: x (B,T,H,P); B,C (B,T,G,N) with H % G == 0; dt (B,T,H).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.rglru import causal_conv1d
+
+
+def _expand_groups(t, H):
+    """(B,...,G,N) -> (B,...,H,N) by repeating each group H//G times."""
+    G = t.shape[-2]
+    return jnp.repeat(t, H // G, axis=-2)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, S0=None):
+    """Chunked SSD scan. Returns (y, S_last).
+
+    x: (B,T,H,P); dt: (B,T,H) (already softplus'd); A: (H,) negative;
+    Bm, Cm: (B,T,G,N). S0: optional (B,H,N,P) initial state.
+    """
+    B_, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, T)
+    pad = (-T) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // Q
+
+    xdt = (x * dt[..., None]).astype(jnp.float32)
+    log_a = dt.astype(jnp.float32) * A.astype(jnp.float32)  # (B,T',H), <= 0
+
+    def resh(t):
+        return t.reshape((t.shape[0], nc, Q) + t.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, t.ndim + 1)))
+
+    single_group = (G == 1)
+    if single_group:
+        # Fast path: keep B/C per-group — expanding them to all H heads
+        # materialized (B,T,H,N) fp32 tensors (~5.4 GB/layer on the
+        # mamba2 train cell, §Perf iteration: memory-bound hillclimb).
+        xs = (resh(xdt), resh(log_a), resh(Bm[:, :, 0]), resh(Cm[:, :, 0]))
+    else:
+        xs = (resh(xdt), resh(log_a), resh(_expand_groups(Bm, H)),
+              resh(_expand_groups(Cm, H)))
+
+    if S0 is None:
+        S0 = jnp.zeros((B_, H, N, P), jnp.float32)
+
+    def body(S, inp):
+        xc, lac, Bc, Cc = inp  # xc (B,Q,H,P); lac (B,Q,H); Bc/Cc see above
+        l = jnp.cumsum(lac, axis=1)  # inclusive within-chunk cumulative log-decay
+        causal = jnp.tril(jnp.ones((Q, Q), bool))
+        decay_out = jnp.exp(l[:, -1, :][:, None] - l)  # (B,Q,H)
+        if single_group:
+            # Bc/Cc: (B,Q,N) shared across heads.
+            y_inter = jnp.einsum("bqn,bhnp->bqhp", Cc, S) * jnp.exp(l)[..., None]
+            scores = jnp.einsum("bqn,bkn->bqk", Cc, Bc)
+            dec = l[:, :, None, :] - l[:, None, :, :]  # (B,Q,K,H)
+            M = jnp.exp(jnp.where(causal[None, :, :, None], dec, -1e30))
+            y_intra = jnp.einsum("bqk,bqkh,bkhp->bqhp", scores, M, xc)
+            S_new = (jnp.exp(l[:, -1])[..., None, None] * S +
+                     jnp.einsum("bkn,bkhp->bhnp", Bc,
+                                xc * decay_out[..., None]))
+        else:
+            # Bc/Cc: (B,Q,H,N) per-head.
+            y_inter = jnp.einsum("bqhn,bhnp->bqhp", Cc, S) * jnp.exp(l)[..., None]
+            scores = jnp.einsum("bqhn,bkhn->bhqk", Cc, Bc)
+            dec = (l[:, :, None, :].transpose(0, 3, 1, 2)
+                   - l[:, None, :, :].transpose(0, 3, 1, 2))
+            # Mask inside the exp: exp of masked (positive) entries would
+            # be inf and poison gradients through the 0*inf=nan backward.
+            M = jnp.exp(jnp.where(causal[None, None], dec, -1e30))
+            y_intra = jnp.einsum("bhqk,bkhp->bqhp", scores * M, xc)
+            S_new = (jnp.exp(l[:, -1])[..., None, None] * S +
+                     jnp.einsum("bkhn,bkhp->bhnp", Bc * decay_out[..., None],
+                                xc))
+        return S_new, (y_inter + y_intra)
+
+    S_last, ys = jax.lax.scan(body, S0, xs)  # ys: (nc,B,Q,H,P)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B_, nc * Q, H, P)[:, :T]
+    return y.astype(x.dtype), S_last
+
+
+def ssd_step(x, dt, A, Bm, Cm, S):
+    """Single-token decode. x: (B,1,H,P); Bm/Cm: (B,1,G,N); S: (B,H,N,P)."""
+    H = x.shape[2]
+    a = jnp.exp(dt[:, 0].astype(jnp.float32) * A.astype(jnp.float32))  # (B,H)
+    Bh = _expand_groups(Bm[:, 0], H).astype(jnp.float32)  # (B,H,N)
+    Ch = _expand_groups(Cm[:, 0], H).astype(jnp.float32)
+    xdt = (x[:, 0] * dt[:, 0, :, None]).astype(jnp.float32)  # (B,H,P)
+    S_new = a[..., None, None] * S + jnp.einsum("bhn,bhp->bhnp", Bh, xdt)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, S_new)
+    return y[:, None].astype(x.dtype), S_new
+
+
+def ssd_block(p, x, cfg: ModelConfig, cache=None, parallel=None):
+    """Full mamba2 residual block. cache: None or
+    {"S": (B,H,N,P) fp32, "conv": (B,K-1,conv_ch)}. Returns (x_out, cache)."""
+    s = cfg.ssd
+    eps = cfg.norm_eps
+    di = cfg.d_inner_ssd
+    H = cfg.ssd_heads
+    P = s.head_dim
+    G, N = s.n_groups, s.d_state
+
+    h = rms_norm(x, p["ln1"], eps)
+    # Separate projections (vs. one fused matmul) keep TP sharding clean:
+    # z/x/dt shard with heads over the model axis, B/C stay replicated
+    # (they are per-group, G=1, and feed every head's state update).
+    z = jnp.einsum("btd,de->bte", h, p["w_z"])
+    xb = jnp.einsum("btd,de->bte", h, p["w_x"])
+    Bc = jnp.einsum("btd,de->bte", h, p["w_B"])
+    Cc = jnp.einsum("btd,de->bte", h, p["w_C"])
+    dt = jnp.einsum("btd,dh->bth", h, p["w_dt"])
+    cs = cache["conv"] if cache is not None else None
+    xb, st_x = causal_conv1d(p["conv_x"], xb, None if cs is None else cs["x"])
+    Bc, st_b = causal_conv1d(p["conv_B"], Bc, None if cs is None else cs["B"])
+    Cc, st_c = causal_conv1d(p["conv_C"], Cc, None if cs is None else cs["C"])
+    conv_state = {"x": st_x, "B": st_b, "C": st_c}
+    xb, Bc, Cc = jax.nn.silu(xb), jax.nn.silu(Bc), jax.nn.silu(Cc)
+
+    Bt = x.shape[0]
+    T = x.shape[1]
+    xh = xb.reshape(Bt, T, H, P)
+    Bm = Bc.reshape(Bt, T, G, N)
+    Cm = Cc.reshape(Bt, T, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,)
+    if parallel is not None and T > 1:
+        # Pin the head dim to the model axis: GSPMD's propagation loses
+        # the sharding through the chunked-scan einsum chain and runs the
+        # whole SSD replicated on every model rank (measured 16x traffic
+        # on the mamba2 train cell — §Perf hillclimb 1).
+        from jax.sharding import PartitionSpec as P_
+        hspec = P_(parallel.data_axes, None, parallel.tp_axis, None)
+        xh = jax.lax.with_sharding_constraint(xh, hspec)
+        dt = jax.lax.with_sharding_constraint(
+            dt, P_(parallel.data_axes, None, parallel.tp_axis))
+
+    if cache is None:
+        y, S_last = ssd_chunked(xh, dt, A, Bm, Cm, s.chunk)
+        new_cache = None
+    elif T == 1:  # decode
+        y, S_last = ssd_step(xh, dt, A, Bm, Cm, cache["S"])
+        new_cache = {"S": S_last, "conv": conv_state}
+    else:  # prefill: chunked scan from zero state, emit the final state
+        y, S_last = ssd_chunked(xh, dt, A, Bm, Cm, s.chunk)
+        new_cache = {"S": S_last, "conv": conv_state}
+
+    y = y + p["D"][None, None, :, None] * xh  # skip connection
+    y = y.reshape(Bt, T, di)
+    # Gated RMSNorm (mamba2): norm(y * silu(z)).
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], eps, zero_centered=False)
+    out = jnp.einsum("bte,ed->btd", y, p["w_out"])
+    return x + out, new_cache

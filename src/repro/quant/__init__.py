@@ -1,0 +1,15 @@
+"""Quantization utilities: int8 per-channel weight quantization (the
+paper's 8-bit post-training quantization study, Fig 6, adapted to
+serving weights) and error-feedback gradient compression building blocks
+(cross-pod sync at DiLoCo-style outer steps)."""
+
+from repro.quant.int8 import (
+    quantize_int8,
+    dequantize_int8,
+    quantize_tree,
+    dequantize_tree,
+    ef_compress,
+)
+
+__all__ = ["quantize_int8", "dequantize_int8", "quantize_tree",
+           "dequantize_tree", "ef_compress"]

@@ -1,0 +1,71 @@
+"""int8 quantization with per-channel scales + error feedback.
+
+- Weights: symmetric per-output-channel int8; storage -75% vs fp32
+  (matching the paper's "8-bit quantized model leads to the most storage
+  saving of 75%" finding), dequantized on the fly or consumed by the
+  int8 Pallas matmul kernel.
+- Gradient/delta compression: `ef_compress` quantizes a tensor plus the
+  accumulated residual and returns the new residual — the error-feedback
+  loop keeps long-run bias at zero (property-tested)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x, axis: int = -1):
+    """Symmetric per-channel int8. Returns (q int8, scale f32)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def quantize_tree(tree, min_size: int = 1024):
+    """Quantize float leaves with >= min_size elements; keep the rest.
+    Returns a tree of dicts {"q","scale"} or raw leaves."""
+    def f(x):
+        if (hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)
+                and x.size >= min_size and x.ndim >= 2):
+            q, s = quantize_int8(x)
+            return {"q": q, "scale": s}
+        return x
+    return jax.tree.map(f, tree)
+
+
+def dequantize_tree(tree, like=None):
+    def is_q(x):
+        return isinstance(x, dict) and set(x) == {"q", "scale"}
+
+    def f(x):
+        return dequantize_int8(x["q"], x["scale"]) if is_q(x) else x
+    out = jax.tree.map(f, tree, is_leaf=is_q)
+    if like is not None:
+        out = jax.tree.map(lambda o, l: o.astype(l.dtype), out, like)
+    return out
+
+
+def ef_compress(x, residual, axis: int = -1):
+    """Error-feedback quantization step.
+
+    q = Q(x + residual); new_residual = (x + residual) - deq(q).
+    Returns (q, scale, new_residual). Summed over steps, the quantization
+    error does not accumulate (sum of deq(q) -> sum of x)."""
+    target = x.astype(jnp.float32) + residual
+    q, scale = quantize_int8(target, axis)
+    new_residual = target - dequantize_int8(q, scale)
+    return q, scale, new_residual
+
+
+def tree_bytes_quantized(tree) -> int:
+    import numpy as np
+    total = 0
+    for x in jax.tree.leaves(tree):
+        total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total

@@ -1,0 +1,3 @@
+"""Serving substrate: network models, the event-driven request simulator
+(paper §5.2 simulations), the real CPU inference engine with KV-cache
+management and continuous batching, and the CNNSelect-fronted server."""

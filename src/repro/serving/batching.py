@@ -1,0 +1,96 @@
+"""Continuous batching scheduler.
+
+The paper notes that throughput-batching serving systems "may increase
+waiting time of some requests" — this scheduler bounds that: requests
+join the next decode group as slots free, instead of waiting for a whole
+batch to drain. Decode steps are aligned per group (engine constraint);
+the scheduler's job is slot assignment, padding, and retirement."""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass(order=True)
+class Request:
+    arrival: float
+    rid: int = field(compare=False)
+    prompt: np.ndarray = field(compare=False, repr=False)
+    max_new_tokens: int = field(compare=False, default=16)
+    sla_ms: float = field(compare=False, default=0.0)
+    t_input_ms: float = field(compare=False, default=0.0)
+    # outputs
+    tokens: list = field(compare=False, default_factory=list)
+    start_exec: float = field(compare=False, default=0.0)
+    finish: float = field(compare=False, default=0.0)
+    model: str = field(compare=False, default="")
+
+
+class ContinuousBatcher:
+    """Groups requests into aligned decode batches of size `batch_size`.
+
+    step(now) returns work items: ("prefill", [reqs]) when a fresh group
+    forms, then ("decode", group) while any member needs tokens. Members
+    finishing early free their slot for the next group formation."""
+
+    def __init__(self, batch_size: int, prompt_len: int):
+        self.batch_size = batch_size
+        self.prompt_len = prompt_len
+        self.queue: List[Request] = []
+        # slots[i] is the request bound to engine batch slot i (or None).
+        self.slots: List[Optional[Request]] = [None] * batch_size
+        self.done: List[Request] = []
+
+    def submit(self, req: Request):
+        heapq.heappush(self.queue, req)
+
+    @property
+    def n_active(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or self.n_active > 0
+
+    def form_group(self, now: float) -> Optional[List[Request]]:
+        """Take up to batch_size arrived requests into a fresh group.
+        (The aligned-decode engine prefills a whole group at once, so new
+        groups form only when the previous group has fully drained.)"""
+        if self.n_active > 0:
+            return None
+        ready = []
+        while self.queue and len(ready) < self.batch_size:
+            if self.queue[0].arrival <= now:
+                ready.append(heapq.heappop(self.queue))
+            else:
+                break
+        if not ready:
+            return None
+        self.slots = [None] * self.batch_size
+        for i, r in enumerate(ready):
+            self.slots[i] = r
+            r.start_exec = now
+        return ready
+
+    def pad_prompts(self) -> np.ndarray:
+        out = np.zeros((self.batch_size, self.prompt_len), np.int32)
+        for i, r in enumerate(self.slots):
+            if r is not None:
+                p = r.prompt[-self.prompt_len:]
+                out[i, -len(p):] = p
+        return out
+
+    def record_tokens(self, toks: np.ndarray, now: float):
+        """toks: (batch_size,) — append per slot; retire finished slots."""
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            r.tokens.append(int(toks[i]))
+            if len(r.tokens) >= r.max_new_tokens:
+                r.finish = now
+                self.done.append(r)
+                self.slots[i] = None

@@ -1,0 +1,48 @@
+"""Mobile network models (paper §4.1 "Impact of mobile network
+conditions"). T_input is the request upload time; the paper estimates
+T_nw conservatively as 2 * T_input (responses are small text labels)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.configs.paper_zoo import NETWORKS, sample_network
+
+
+@dataclass
+class NetworkModel:
+    name: str
+    mean: float
+    std: float
+
+    @classmethod
+    def named(cls, name: str) -> "NetworkModel":
+        d = NETWORKS[name]
+        return cls(name, d["mean"], d["std"])
+
+    def sample_t_input(self, rng: np.random.Generator, n: int = 1):
+        return sample_network(self.name, rng, n) if self.name in NETWORKS \
+            else np.maximum(rng.normal(self.mean, self.std, n), 1.0)
+
+    def estimate_t_input(self, observed: float | None = None) -> float:
+        """Server-side estimate used for budgeting: the paper measures the
+        actual upload time of the arriving request (observed); fall back
+        to the distribution mean."""
+        return observed if observed is not None else self.mean
+
+
+def resize_decision(size_kb: float, *, scale_ms_per_kb: float = 0.165,
+                    upload_ms_per_kb: float = 0.214) -> bool:
+    """Paper §3.1 'Impact of Image Size': downscale an input of size x1
+    to x2 iff T_d(x1,x2) + T_n(x2) <= T_n(x1). Linear cost model fitted
+    to the paper's measurements (36.83 ms per 172 KB upload; up to 38 ms
+    to resize <=226 KB). Returns True if resizing before upload wins."""
+    target_kb = 110.0  # post-resize size used in the paper's experiments
+    if size_kb <= target_kb:
+        return False
+    t_resize = scale_ms_per_kb * size_kb
+    t_up_full = upload_ms_per_kb * size_kb
+    t_up_resized = upload_ms_per_kb * target_kb
+    return t_resize + t_up_resized <= t_up_full

@@ -1,0 +1,118 @@
+"""The CNNSelect-fronted multi-model server (paper §5 end-to-end system).
+
+Manages a zoo of real engines (small models on CPU here; pod-sharded on
+the TPU target), online latency profiles, and per-request model
+selection: estimate the remaining budget from the observed upload time,
+run CNNSelect over the measured profiles, pay cold-start if the chosen
+model is cold, execute, and record SLA attainment + the measured latency
+back into the profile store."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.profiles import ProfileStore
+from repro.core.selection import ModelProfile, cnnselect, greedy_select
+from repro.core.zoo import ModelZoo
+from repro.serving.batching import Request
+from repro.serving.engine import InferenceEngine
+
+
+@dataclass
+class ServedModel:
+    name: str
+    engine: InferenceEngine
+    accuracy: float            # task accuracy measured offline
+    size_bytes: int = 0
+
+
+@dataclass
+class ServerMetrics:
+    served: int = 0
+    violations: int = 0
+    latencies_ms: list = field(default_factory=list)
+    accuracies: list = field(default_factory=list)
+    selections: dict = field(default_factory=dict)
+
+    @property
+    def attainment(self) -> float:
+        return 1.0 - self.violations / max(self.served, 1)
+
+    def summary(self) -> dict:
+        lat = np.array(self.latencies_ms) if self.latencies_ms else np.zeros(1)
+        return {
+            "served": self.served,
+            "attainment": self.attainment,
+            "accuracy": float(np.mean(self.accuracies)) if self.accuracies else 0.0,
+            "mean_ms": float(lat.mean()),
+            "p95_ms": float(np.percentile(lat, 95)),
+            "selections": dict(self.selections),
+        }
+
+
+class CNNSelectServer:
+    def __init__(self, models: List[ServedModel], *, t_threshold: float,
+                 policy: str = "cnnselect", seed: int = 0,
+                 n_tokens: int = 8, stage2_variant: str = "figure"):
+        self.models = {m.name: m for m in models}
+        self.order = [m.name for m in models]
+        self.policy = policy
+        self.t_threshold = t_threshold
+        self.n_tokens = n_tokens
+        self.stage2_variant = stage2_variant
+        self.store = ProfileStore()
+        self.rng = np.random.default_rng(seed)
+        self.metrics = ServerMetrics()
+
+    def profile_models(self, prompt_len: int = 16, reps: int = 5):
+        """Measure each engine's hot latency (paper: profiles measured and
+        managed by the inference server)."""
+        for name, m in self.models.items():
+            m.engine.warmup(prompt_len)
+            p = m.engine.measured_profile(prompt_len, self.n_tokens, reps)
+            self.store.set_prior(name, p["mu"], max(p["sigma"], 0.5))
+
+    def current_profiles(self) -> List[ModelProfile]:
+        out = []
+        for name in self.order:
+            mu, sg = self.store.mu_sigma(name)
+            out.append(ModelProfile(name=name,
+                                    accuracy=self.models[name].accuracy,
+                                    mu=mu, sigma=max(sg, 0.5)))
+        return out
+
+    def select(self, t_sla: float, t_input: float) -> str:
+        profs = self.current_profiles()
+        if self.policy == "cnnselect":
+            r = cnnselect(profs, t_sla, t_input, self.t_threshold, self.rng,
+                          self.stage2_variant)
+            return profs[r.index].name
+        if self.policy == "greedy":
+            return profs[greedy_select(profs, t_sla)].name
+        return profs[greedy_select(profs, t_sla, t_input=t_input,
+                                   use_network=True)].name
+
+    def handle(self, req: Request, t_sla: float) -> dict:
+        """Serve one request batch-of-one style (the prototype evaluation
+        path, Fig 12). Returns the per-request record."""
+        name = self.select(t_sla, req.t_input_ms)
+        m = self.models[name]
+        t0 = time.perf_counter()
+        B = m.engine.batch_size
+        prompts = np.tile(req.prompt[None, :], (B, 1)).astype(np.int32)
+        toks = m.engine.generate(prompts, self.n_tokens)
+        exec_ms = (time.perf_counter() - t0) * 1000.0
+        self.store.record(name, exec_ms)
+        e2e = req.t_input_ms * 2.0 + exec_ms
+        ok = e2e <= t_sla
+        self.metrics.served += 1
+        self.metrics.violations += int(not ok)
+        self.metrics.latencies_ms.append(e2e)
+        self.metrics.accuracies.append(m.accuracy)
+        self.metrics.selections[name] = self.metrics.selections.get(name, 0) + 1
+        return {"model": name, "e2e_ms": e2e, "ok": ok,
+                "tokens": toks[0].tolist()}

@@ -1,0 +1,193 @@
+"""Logical-axis -> mesh-axis rule tables and sharding helpers.
+
+Two profiles:
+
+- **train**: FSDP(ZeRO-3) + TP. Weight matmul-input dims (`hidden_in`,
+  `embed`, `expert_in`) shard over the data axis (all-gathered at use by
+  GSPMD / explicitly inside the MoE shard_map); TP dims (`heads`, `ff`,
+  `vocab`, `experts`|`expert_ff`, `rnn_width`, `ssd_inner`...) shard over
+  the model axis. Activations: batch over (pod, data); optionally the
+  sequence dim over model between blocks (Megatron-style sequence
+  parallelism, `seq_shard`) so the scanned residual carry stays sharded.
+
+- **serve**: latency-oriented 2D TP. `ff` shards over (data, model)
+  (all assigned d_ff are divisible by 256); heads over model; no FSDP
+  for dense weights; MoE expert weights keep the per-layer FSDP gather
+  (they are too large otherwise). KV caches: batch over (pod, data),
+  kv-heads over model (GSPMD pads when kv < 16 — baseline; see §Perf).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    mesh: Mesh
+    data_axes: Tuple[str, ...]          # activation batch axes, e.g. ("pod","data")
+    fsdp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+    moe_mode: str = "auto"              # ep | tp | auto
+    profile: str = "train"              # train | serve
+    seq_shard: bool = False             # Megatron-style SP between blocks
+    # "full": T-sharded residual constraint after every add;
+    # "carry": only the scan carry is T-sharded — x is gathered to
+    # model-replicated at group entry so qkv/attention run head-sharded
+    # (per-arch lever, see §Perf).
+    seq_mode: str = "full"
+    attn_pin: bool = False              # pin q/k/v head-sharded (per-arch lever)
+
+    @property
+    def num_devices(self) -> int:
+        return self.mesh.devices.size
+
+
+# Sentinel for 0-d state leaves (e.g. the train step counter): maps to P().
+SCALAR_AXES = ("@scalar",)
+
+
+def make_rules(parallel: ParallelConfig, cfg=None) -> dict:
+    """pjit in_shardings demand exact divisibility (GSPMD padding applies
+    only to propagated intermediates), so rules are config-conditional:
+
+    - kv_heads shard over model only when n_kv_heads % tp == 0; otherwise
+      the KV *cache* shards its sequence dim over model instead (GSPMD
+      then executes decode attention flash-decode style: per-shard
+      partial max/sum + tiny psums — verified in the dry-run HLO).
+    - vocab shards only when divisible (mamba2's 50280 is not).
+    """
+    fsdp = parallel.fsdp_axes
+    tp = parallel.tp_axis
+    tp_size = parallel.mesh.shape[tp]
+    train = parallel.profile == "train"
+    kv_div = cfg is None or cfg.n_kv_heads % tp_size == 0
+    vocab_div = cfg is None or cfg.padded_vocab % tp_size == 0
+    return {
+        # embedding / unembedding
+        "vocab": tp if vocab_div else None,
+        "embed": fsdp,
+        # dense weights
+        "hidden_in": fsdp if train else None,
+        "heads": tp,
+        "kv_heads": tp if kv_div else None,
+        "head_dim": None,
+        # 1D TP for ff in BOTH profiles: 2D (data x model) serve-TP forced
+        # GSPMD to all-gather batch-sharded activations over data at every
+        # FFN (v0 prefill blow-up, EXPERIMENTS.md §Perf iteration 1).
+        "ff": tp,
+        # MoE (layout consumed by the shard_map in models/moe.py)
+        "router": None,
+        "experts": tp,       # remapped to None at spec time for moe_mode=tp
+        "expert_in": fsdp,
+        "expert_ff": None,   # remapped to tp for moe_mode=tp
+        # RG-LRU / SSD
+        "rnn_in": None,
+        "rnn_width": tp,
+        "ssd_inner": tp,
+        "ssd_heads": tp,
+        "ssd_gn": None,
+        "ssd_state": None,
+        "ssd_hd": None,
+        # caches
+        "cache_batch": parallel.data_axes,
+        "cache_seq": None if kv_div else tp,
+        # misc
+        "norm": None,
+        "conv_k": None,
+        "layers": None,
+    }
+
+
+def moe_mode_for(cfg, parallel: ParallelConfig) -> str:
+    """auto   -> ep/tp   (weight-gather layouts: train/prefill)
+       auto2d -> ep2d/tp2d (weight-resident layouts: decode)."""
+    mode = parallel.moe_mode
+    tp_size = parallel.mesh.shape[parallel.tp_axis]
+    ep_ok = cfg.moe is not None and cfg.moe.n_experts % tp_size == 0
+    if mode == "auto":
+        return "ep" if ep_ok else "tp"
+    if mode == "auto2d":
+        return "ep2d" if ep_ok else "tp2d"
+    return mode
+
+
+def spec_for(axes: Tuple[str, ...], rules: dict) -> P:
+    if tuple(axes) == SCALAR_AXES:
+        return P()
+    entries = []
+    used = set()
+    for ax in axes:
+        m = rules.get(ax)
+        if m is None:
+            entries.append(None)
+            continue
+        ms = (m,) if isinstance(m, str) else tuple(m)
+        ms = tuple(a for a in ms if a not in used)
+        used.update(ms)
+        entries.append(ms[0] if len(ms) == 1 else (ms if ms else None))
+    return P(*entries)
+
+
+def _is_axes_leaf(x) -> bool:
+    # Non-empty tuples of axis names; empty tuples are STRUCTURAL (e.g. an
+    # arch with no tail layers) and must stay part of the tree shape.
+    return (isinstance(x, tuple) and len(x) > 0 and all(
+        isinstance(a, (str, type(None))) for a in x))
+
+
+def tree_specs(logical_tree, parallel: ParallelConfig, cfg=None):
+    """Map a tree of logical-axis tuples to PartitionSpecs."""
+    rules = dict(make_rules(parallel, cfg))
+    if cfg is not None and cfg.moe is not None:
+        # Keep stored expert-weight layouts in lockstep with the
+        # shard_map in_specs (models/moe.py moe_weight_specs).
+        mode = moe_mode_for(cfg, parallel)
+        tp, fsdp = parallel.tp_axis, parallel.fsdp_axes
+        remap = {
+            "ep": {"experts": tp, "expert_in": fsdp, "expert_ff": None},
+            "tp": {"experts": None, "expert_in": fsdp, "expert_ff": tp},
+            "ep2d": {"experts": tp, "expert_in": None, "expert_ff": fsdp},
+            "tp2d": {"experts": None, "expert_in": None,
+                     "expert_ff": tuple(fsdp) + (tp,)},
+        }[mode]
+        rules.update(remap)
+    return jax.tree.map(lambda axes: spec_for(axes, rules), logical_tree,
+                        is_leaf=_is_axes_leaf)
+
+
+def tree_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_spec(parallel: ParallelConfig, ndim: int) -> P:
+    """Batch-leading activation spec: (B, ...) -> batch over data axes."""
+    return P(parallel.data_axes, *([None] * (ndim - 1)))
+
+
+def make_parallel(mesh: Mesh, profile: str, *, seq_shard: Optional[bool] = None,
+                  moe_mode: str = "auto", attn_pin: bool = False,
+                  seq_mode: str = "full") -> ParallelConfig:
+    axes = mesh.axis_names
+    data_axes = tuple(a for a in axes if a in ("pod", "data"))
+    if seq_shard is None:
+        seq_shard = profile == "train"
+    return ParallelConfig(
+        mesh=mesh,
+        data_axes=data_axes,
+        fsdp_axes=("data",),
+        tp_axis="model",
+        moe_mode=moe_mode,
+        profile=profile,
+        seq_shard=seq_shard,
+        seq_mode=seq_mode,
+        attn_pin=attn_pin,
+    )

@@ -1,0 +1,100 @@
+"""DiLoCo-style cross-pod training with error-feedback int8 outer sync.
+
+At 1000+ node scale the cross-pod (DCN) links are the scarce resource.
+Instead of all-reducing gradients across pods every step, each pod
+trains independently for `inner_steps`, then pods exchange *parameter
+deltas* quantized to int8 with error feedback (repro.quant.ef_compress)
+and apply an outer (Nesterov-momentum) update to the shared anchor:
+
+    delta_p   = anchor - params_p                  (per pod)
+    q_p       = EF-int8(delta_p)                   (residual carried)
+    delta_avg = mean_p dequant(q_p)                (the only DCN traffic)
+    anchor'   <- outer_opt(anchor, delta_avg)
+    params_p  <- anchor'
+
+DCN bytes per sync drop 4x vs fp32 deltas (int8 + per-channel scales),
+and by 1/inner_steps vs per-step gradient sync. The single-process
+implementation below is pod-count-parameterized and exercised by tests;
+on real multi-pod deployments each pod is one jax process group and the
+averaging runs over DCN."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.int8 import ef_compress, dequantize_int8
+
+
+@dataclass
+class OuterState:
+    anchor: dict                      # shared fp32 anchor params
+    momentum: dict                    # Nesterov momentum on deltas
+    residuals: List[dict]             # per-pod EF residuals
+    syncs: int = 0
+    bytes_sent: int = 0               # cumulative compressed DCN bytes
+    bytes_fp32: int = 0               # what fp32 deltas would have cost
+
+
+def init_outer(params, n_pods: int) -> OuterState:
+    f32 = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    zeros = jax.tree.map(jnp.zeros_like, f32)
+    return OuterState(
+        anchor=f32,
+        momentum=jax.tree.map(jnp.zeros_like, f32),
+        residuals=[jax.tree.map(jnp.zeros_like, f32) for _ in range(n_pods)],
+    )
+
+
+def outer_sync(state: OuterState, pod_params: List[dict], *,
+               outer_lr: float = 0.7, outer_momentum: float = 0.9,
+               quantize: bool = True) -> OuterState:
+    """One outer step. Returns the new OuterState; callers reset each
+    pod's params to `state.anchor` afterwards."""
+    n = len(pod_params)
+    deltas = []
+    comp_bytes = 0
+    raw_bytes = 0
+    for i, params in enumerate(pod_params):
+        delta = jax.tree.map(
+            lambda a, p: a - p.astype(jnp.float32), state.anchor, params)
+        if quantize:
+            new_res = {}
+            deq = {}
+            flat_delta, treedef = jax.tree.flatten(delta)
+            flat_res = jax.tree.leaves(state.residuals[i])
+            out_d, out_r = [], []
+            for d, r in zip(flat_delta, flat_res):
+                if d.ndim >= 2:
+                    q, s, nr = ef_compress(d, r)
+                    out_d.append(dequantize_int8(q, s))
+                    out_r.append(nr)
+                    comp_bytes += q.size + 4 * s.size
+                else:  # tiny 1-D leaves stay fp32
+                    out_d.append(d)
+                    out_r.append(jnp.zeros_like(r))
+                    comp_bytes += d.size * 4
+                raw_bytes += d.size * 4
+            delta = jax.tree.unflatten(treedef, out_d)
+            state.residuals[i] = jax.tree.unflatten(treedef, out_r)
+        deltas.append(delta)
+    avg = jax.tree.map(lambda *ds: sum(ds) / n, *deltas)
+    mom = jax.tree.map(
+        lambda m, d: outer_momentum * m + d, state.momentum, avg)
+    anchor = jax.tree.map(
+        lambda a, m, d: a - outer_lr * (outer_momentum * m + d),
+        state.anchor, mom, avg)  # Nesterov
+    return OuterState(anchor=anchor, momentum=mom,
+                      residuals=state.residuals,
+                      syncs=state.syncs + 1,
+                      bytes_sent=state.bytes_sent + comp_bytes,
+                      bytes_fp32=state.bytes_fp32 + raw_bytes)
+
+
+def broadcast_anchor(state: OuterState, like_params) -> dict:
+    """anchor -> pod param dtype (bf16/fp32)."""
+    return jax.tree.map(lambda a, p: a.astype(p.dtype), state.anchor,
+                        like_params)

@@ -1,0 +1,87 @@
+"""Elastic scaling & failure handling.
+
+At 1000+ node scale, node loss is routine. The recovery path this module
+implements (and tests exercise with host-device meshes):
+
+  1. a heartbeat monitor marks hosts dead (`HostMonitor`),
+  2. the launcher rebuilds a smaller rectangular mesh from survivors
+     (`shrink_mesh`), preferring to shrink the data axis — TP degree is
+     baked into weight layouts, DP is not,
+  3. train state is restored from the last committed checkpoint onto the
+     new mesh (checkpoint.restore_checkpoint with the new shardings) and
+     the step function is re-lowered,
+  4. the data iterator resumes from the checkpointed step — batches are
+     pure functions of (seed, step, host), so the re-run is
+     deterministic with the new host count.
+
+Straggler mitigation at the serving layer is hedged requests
+(simulator.py); at the training layer, synchronous SPMD steps make
+per-step stragglers a scheduling concern, so the monitor also exposes
+`slow_hosts` for the launcher to drain."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclass
+class HostMonitor:
+    n_hosts: int
+    timeout_s: float = 60.0
+    slow_factor: float = 3.0
+    last_beat: Dict[int, float] = field(default_factory=dict)
+    step_times: Dict[int, list] = field(default_factory=dict)
+
+    def beat(self, host: int, now: Optional[float] = None,
+             step_time: Optional[float] = None):
+        now = time.monotonic() if now is None else now
+        self.last_beat[host] = now
+        if step_time is not None:
+            self.step_times.setdefault(host, []).append(step_time)
+
+    def dead_hosts(self, now: Optional[float] = None) -> List[int]:
+        now = time.monotonic() if now is None else now
+        return [h for h in range(self.n_hosts)
+                if now - self.last_beat.get(h, -1e18) > self.timeout_s]
+
+    def slow_hosts(self) -> List[int]:
+        med = np.median([np.median(v) for v in self.step_times.values()
+                         if v] or [0.0])
+        if med == 0.0:
+            return []
+        return [h for h, v in self.step_times.items()
+                if v and np.median(v) > self.slow_factor * med]
+
+
+def largest_rect(n: int, model: int) -> Tuple[int, int]:
+    """Largest (data, model) grid with fixed model degree using <= n
+    devices: data = n // model."""
+    return max(n // model, 1), model
+
+
+def shrink_mesh(alive_devices, *, model_degree: int, axis_names=("data", "model")):
+    """Rebuild a rectangular mesh from surviving devices, keeping the TP
+    (model) degree fixed and shrinking DP. Returns (mesh, n_dropped)."""
+    alive = list(alive_devices)
+    data, model = largest_rect(len(alive), model_degree)
+    use = data * model
+    devs = np.asarray(alive[:use]).reshape(data, model)
+    mesh = jax.sharding.Mesh(devs, axis_names)
+    return mesh, len(alive) - use
+
+
+def recover(ckpt_manager, abstract_state, new_mesh, spec_tree):
+    """Restore the latest committed checkpoint onto a (possibly smaller)
+    mesh. Returns (state, step)."""
+    from jax.sharding import NamedSharding
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(new_mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    state, manifest = ckpt_manager.restore_latest(
+        abstract_state, shardings=shardings)
+    return state, manifest["step"]

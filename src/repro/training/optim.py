@@ -1,0 +1,197 @@
+"""Optimizers from scratch (no optax in this environment).
+
+- `adamw`: classic AdamW with fp32 m/v, decoupled weight decay, global
+  gradient-norm clipping, arbitrary LR schedule.
+- `adafactor`: factored second moments (rows/cols) for >=2D leaves, no
+  first moment by default — the memory-frugal choice for the 100B+
+  assigned architectures (grok-1, qwen3-moe), where full Adam state
+  would not fit a single v5e pod (DESIGN.md §5).
+
+Both expose `state_logical_axes(param_axes)` so optimizer state shards
+exactly like (or factored from) its parameters.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable          # params -> opt_state
+    update: Callable        # (grads, opt_state, params, step) -> (new_params, new_opt_state, metrics)
+    state_logical_axes: Callable  # param_axes_tree -> state_axes_tree
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def constant_schedule(base_lr: float):
+    return lambda step: jnp.asarray(base_lr, jnp.float32)
+
+
+class _Packed:
+    """Opaque (unregistered-pytree) container so per-leaf optimizer results
+    can be split apart with tree.map — plain tuples would collide with the
+    structural tuples inside parameter trees."""
+    __slots__ = ("vals",)
+
+    def __init__(self, *vals):
+        self.vals = vals
+
+
+def _unpack(flat, i):
+    return jax.tree.map(lambda t: t.vals[i], flat)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale), tree), gn
+
+
+def mixed_precision(inner: Optimizer) -> Optimizer:
+    """bf16 params + fp32 master copy in the optimizer state.
+
+    With fp32 params the autodiff cast boundary made XLA all-reduce
+    gradients in fp32; keeping the *live* params bf16 means gradients are
+    born bf16, so the data-parallel reductions move half the bytes (the
+    gradient-compression lever of DESIGN.md §5 — measured in §Perf).
+    The int8+error-feedback path (repro.quant.ef_compress) extends this
+    for cross-pod outer steps."""
+
+    def init(params):
+        master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        return {"master": master, "inner": inner.init(params)}
+
+    def update(grads, state, params, step):
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        new_master, new_inner, metrics = inner.update(
+            g32, state["inner"], state["master"], step)
+        new_params = jax.tree.map(
+            lambda m, p: m.astype(p.dtype), new_master, params)
+        return new_params, {"master": new_master, "inner": new_inner}, metrics
+
+    def state_logical_axes(param_axes):
+        return {"master": param_axes,
+                "inner": inner.state_logical_axes(param_axes)}
+
+    return Optimizer(init, update, state_logical_axes)
+
+
+def adamw(lr_schedule, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, clip_norm: float = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        grads, gn = clip_by_global_norm(grads, clip_norm)
+        stepf = jnp.asarray(step, jnp.float32) + 1.0
+        lr = lr_schedule(step)
+        bc1 = 1.0 - b1 ** stepf
+        bc2 = 1.0 - b2 ** stepf
+
+        def upd(g, m, v, p):
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m / bc1
+            vhat = v / bc2
+            pf = p.astype(jnp.float32)
+            new_p = pf - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * pf)
+            return _Packed(new_p.astype(p.dtype), m, v)
+
+        flat = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = _unpack(flat, 0)
+        new_m = _unpack(flat, 1)
+        new_v = _unpack(flat, 2)
+        return new_params, {"m": new_m, "v": new_v}, {"grad_norm": gn, "lr": lr}
+
+    def state_logical_axes(param_axes):
+        return {"m": param_axes, "v": param_axes}
+
+    return Optimizer(init, update, state_logical_axes)
+
+
+def adafactor(lr_schedule, eps2: float = 1e-30, clip_threshold: float = 1.0,
+              decay_pow: float = 0.8, weight_decay: float = 0.0,
+              min_dim_factored: int = 2) -> Optimizer:
+    """Adafactor (Shazeer & Stern 2018), beta1=0 variant."""
+
+    def _factored(p):
+        return p.ndim >= min_dim_factored
+
+    def init(params):
+        def st(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree.map(st, params,
+                                  is_leaf=lambda x: hasattr(x, "shape"))}
+
+    def update(grads, state, params, step):
+        stepf = jnp.asarray(step, jnp.float32) + 1.0
+        beta2 = 1.0 - stepf ** (-decay_pow)
+        lr = lr_schedule(step)
+
+        def upd(g, v, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps2
+            if _factored(p):
+                vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps2)
+                u = (g * jax.lax.rsqrt(vr / denom)[..., None]
+                     * jax.lax.rsqrt(vc)[..., None, :])
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                vv = beta2 * v["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(vv)
+                new_v = {"v": vv}
+            # RMS clip.
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            pf = p.astype(jnp.float32)
+            scale = jnp.maximum(jnp.sqrt(jnp.mean(jnp.square(pf)) + 1e-30), 1e-3)
+            new_p = pf - lr * scale * u - lr * weight_decay * pf
+            return _Packed(new_p.astype(p.dtype), new_v)
+
+        # grads' structure drives the map; the state subtree ({"vr","vc"} or
+        # {"v"}) at each grad leaf is passed whole to upd.
+        flat = jax.tree.map(upd, grads, state["v"], params)
+        new_params = _unpack(flat, 0)
+        new_v = _unpack(flat, 1)
+        return new_params, {"v": new_v}, {"lr": lr}
+
+    def state_logical_axes(param_axes):
+        def st(axes):
+            # Mirror the factoring: vr drops the last logical axis, vc the
+            # second-to-last.
+            if len(axes) >= min_dim_factored:
+                return {"vr": axes[:-1], "vc": axes[:-2] + axes[-1:]}
+            return {"v": axes}
+        # Empty tuples are structural (archs without tail layers), not axes.
+        return {"v": jax.tree.map(
+            st, param_axes,
+            is_leaf=lambda x: isinstance(x, tuple) and len(x) > 0 and all(
+                isinstance(a, (str, type(None))) for a in x))}
+
+    return Optimizer(init, update, state_logical_axes)

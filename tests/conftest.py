@@ -1,0 +1,17 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run subprocess sets its own
+# device count); keep any inherited flags out.
+os.environ.pop("XLA_FLAGS", None)
+os.environ.setdefault("REPRO_PALLAS_INTERPRET", "1")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

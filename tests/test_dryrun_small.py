@@ -1,0 +1,77 @@
+"""Reduced-device dry-run integration: the same launcher that targets the
+512-chip production mesh must lower+compile on an 8-host-device mesh in a
+subprocess (pytest's own process keeps 1 device), including a multi-pod
+(2,2,2) mesh and the sharded-vs-dense MoE equivalence."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SRC = os.path.join(ROOT, "src")
+
+
+def run_dryrun(args, devices=8, timeout=420):
+    env = dict(os.environ,
+               PYTHONPATH=SRC,
+               REPRO_DRYRUN_DEVICES=str(devices))
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun"] + args,
+        capture_output=True, text=True, env=env, timeout=timeout,
+        cwd=ROOT)
+
+
+@pytest.mark.slow
+def test_single_pod_cells(tmp_path):
+    r = run_dryrun(["--arch", "stablelm-1.6b", "--shape", "train_4k",
+                    "--shape", "decode_32k",
+                    "--mesh", "custom", "--mesh-shape", "2,4",
+                    "--mesh-axes", "data,model",
+                    "--out", str(tmp_path), "--tag", "t", "--force"])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    for shape in ("train_4k", "decode_32k"):
+        d = json.load(open(tmp_path / f"stablelm-1.6b_{shape}_custom_t.json"))
+        assert d["hlo"]["dot_flops"] > 0
+        assert d["terms"]["memory_s"] > 0
+        assert d["memory"]["argument_bytes"] > 0
+
+
+@pytest.mark.slow
+def test_multipod_mesh_lowers(tmp_path):
+    """The pod axis must shard: 2x2x2 mesh with ('pod','data','model')."""
+    r = run_dryrun(["--arch", "gemma2-9b", "--shape", "decode_32k",
+                    "--mesh", "custom", "--mesh-shape", "2,2,2",
+                    "--mesh-axes", "pod,data,model",
+                    "--out", str(tmp_path), "--tag", "t", "--force"])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    d = json.load(open(tmp_path / "gemma2-9b_decode_32k_custom_t.json"))
+    assert d["devices"] == 8
+    assert d["hlo"]["collective_count"] > 0
+
+
+@pytest.mark.slow
+def test_long500k_skip_policy(tmp_path):
+    r = run_dryrun(["--arch", "yi-9b", "--shape", "long_500k",
+                    "--mesh", "custom", "--mesh-shape", "2,4",
+                    "--mesh-axes", "data,model",
+                    "--out", str(tmp_path), "--tag", "t", "--force"])
+    assert r.returncode == 0
+    d = json.load(open(tmp_path / "yi-9b_long_500k_custom_t.json"))
+    assert d["skipped"] and "sub-quadratic" in d["reason"]
+
+
+@pytest.mark.slow
+def test_moe_cell_compiles_multidevice(tmp_path):
+    r = run_dryrun(["--arch", "qwen3-moe-235b-a22b", "--shape", "decode_32k",
+                    "--mesh", "custom", "--mesh-shape", "2,4",
+                    "--mesh-axes", "data,model",
+                    "--out", str(tmp_path), "--tag", "t", "--force"],
+                   timeout=540)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    d = json.load(open(
+        tmp_path / "qwen3-moe-235b-a22b_decode_32k_custom_t.json"))
+    assert d["info"]["moe_mode"] == "ep2d"

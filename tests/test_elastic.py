@@ -1,0 +1,94 @@
+"""Elastic scaling & failure handling."""
+
+import numpy as np
+import pytest
+
+from repro.training.elastic import HostMonitor, largest_rect
+
+
+def test_monitor_detects_dead_hosts():
+    m = HostMonitor(n_hosts=4, timeout_s=10.0)
+    for h in range(4):
+        m.beat(h, now=0.0)
+    m.beat(0, now=20.0)
+    m.beat(1, now=20.0)
+    assert set(m.dead_hosts(now=25.0)) == {2, 3}
+
+
+def test_monitor_flags_stragglers():
+    m = HostMonitor(n_hosts=3, slow_factor=2.0)
+    for h, t in [(0, 1.0), (1, 1.1), (2, 5.0)]:
+        for _ in range(5):
+            m.beat(h, now=0.0, step_time=t)
+    assert m.slow_hosts() == [2]
+
+
+def test_largest_rect_keeps_tp_degree():
+    assert largest_rect(256, 16) == (16, 16)
+    assert largest_rect(255, 16) == (15, 16)   # one host lost -> DP shrinks
+    assert largest_rect(17, 16) == (1, 16)
+
+
+def test_recover_reshards_onto_smaller_mesh(tmp_path):
+    """Full elastic loop on host devices: checkpoint on a (4,2) mesh,
+    lose devices, restore onto (2,2) and keep training."""
+    import subprocess
+    import sys
+    import os
+    ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    code = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.configs import reduced_config
+from repro.data import MarkovLMTask
+from repro.training.optim import adamw, constant_schedule
+from repro.training.step import (make_train_step, init_train_state,
+                                 train_state_logical_axes, abstract_train_state)
+from repro.training.checkpoint import CheckpointManager
+from repro.training.elastic import shrink_mesh, recover
+from repro.sharding import make_parallel, tree_specs, tree_shardings
+
+cfg = reduced_config("stablelm_1_6b")
+opt = adamw(constant_schedule(1e-3))
+task = MarkovLMTask(vocab=cfg.vocab, seed=0)
+devs = jax.devices()
+mesh = Mesh(np.array(devs).reshape(4, 2), ("data", "model"))
+par = make_parallel(mesh, "train", seq_shard=False)
+specs = tree_specs(train_state_logical_axes(cfg, opt), par, cfg)
+sh = tree_shardings(specs, mesh)
+step = jax.jit(make_train_step(cfg, opt, par), in_shardings=(sh, None),
+               out_shardings=(sh, None))
+state = jax.device_put(init_train_state(cfg, opt, jax.random.PRNGKey(0)), sh)
+mgr = CheckpointManager("{tmp_path}", keep_n=2, save_interval=2)
+with mesh:
+    for i in range(4):
+        b = task.batch(i, 8, 16)
+        state, m = step(state, dict(inputs=jnp.asarray(b["inputs"]),
+                                    labels=jnp.asarray(b["labels"])))
+        mgr.maybe_save(jax.device_get(state), i + 1)
+
+# "lose" half the devices -> rebuild mesh, restore, keep stepping
+new_mesh, dropped = shrink_mesh(devs[:4], model_degree=2)
+assert new_mesh.devices.shape == (2, 2)
+par2 = make_parallel(new_mesh, "train", seq_shard=False)
+specs2 = tree_specs(train_state_logical_axes(cfg, opt), par2, cfg)
+state2, step_no = recover(mgr, abstract_train_state(cfg, opt), new_mesh, specs2)
+sh2 = tree_shardings(specs2, new_mesh)
+step2 = jax.jit(make_train_step(cfg, opt, par2), in_shardings=(sh2, None),
+                out_shardings=(sh2, None))
+with new_mesh:
+    b = task.batch(step_no, 8, 16)
+    state2, m2 = step2(state2, dict(inputs=jnp.asarray(b["inputs"]),
+                                    labels=jnp.asarray(b["labels"])))
+assert np.isfinite(float(m2["loss"]))
+assert int(state2["step"]) == step_no + 1
+print("ELASTIC_OK", step_no)
+"""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=420, cwd=ROOT)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "ELASTIC_OK" in r.stdout

@@ -1,0 +1,94 @@
+"""The HLO analyzer is the roofline's measurement instrument — pin its
+parsing semantics with synthetic HLO text."""
+
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+HLO = """
+HloModule jit_f
+
+%wide.body.1 (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p = (s32[], f32[8,128]) parameter(0)
+  %a = f32[8,128]{1,0} get-tuple-element(%p), index=1
+  %b = f32[128,64]{1,0} parameter(1)
+  %dot.1 = f32[8,64]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,64]{1,0} all-reduce(%dot.1), replica_groups={{0,1}}, to_apply=%sum.1
+  %dus = f32[8,128]{1,0} dynamic-update-slice(%a, %small, %i0, %i1)
+  %small = f32[8,8]{1,0} parameter(2)
+  ROOT %t = (s32[], f32[8,128]) tuple(%c, %a)
+}
+
+%sum.1 (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %add = f32[] add(%x, %y)
+}
+
+ENTRY %main.1 (arg: f32[8,128]) -> f32[8,128] {
+  %arg = f32[8,128]{1,0} parameter(0)
+  %w = (s32[], f32[8,128]) while(%init), condition=%cond.1, body=%wide.body.1, backend_config={"known_trip_count":{"n":"12"}}
+  %ag = f32[16,128]{1,0} all-gather(%arg), replica_groups={{0,1}}, dimensions={0}
+  ROOT %out = f32[8,128]{1,0} get-tuple-element(%w), index=1
+}
+
+%cond.1 (p: (s32[], f32[8,128])) -> pred[] {
+  %p = (s32[], f32[8,128]) parameter(0)
+  ROOT %lt = pred[] compare(%c, %n), direction=LT
+}
+"""
+
+
+def test_shape_bytes_and_cap():
+    assert H.shape_bytes("f32[8,128]{1,0}") == 8 * 128 * 4
+    assert H.shape_bytes("f32[8,128]{1,0}", cap_elem_bytes=2) == 8 * 128 * 2
+    assert H.shape_bytes("s32[8]") == 32  # ints not capped
+    assert H.shape_bytes("(f32[2,2], bf16[4])") == 16 + 8
+
+
+def test_parse_and_trip_counts():
+    comps, entry = H.parse_hlo(HLO)
+    assert entry == "main.1"
+    assert "wide.body.1" in comps
+    mult = H.while_multipliers(comps, entry)
+    assert mult["wide.body.1"] == 12.0
+    assert mult["cond.1"] == 12.0
+    assert mult["sum.1"] == 12.0  # via to_apply inside the body
+
+
+def test_dot_flops_multiplied_by_trip():
+    res = H.analyze(HLO, compute_elem_bytes=0)
+    # dot: 2*M*N*K = 2*8*64*128, x12 trips
+    assert res["dot_flops"] == 2 * 8 * 64 * 128 * 12
+
+
+def test_collective_accounting():
+    res = H.analyze(HLO, compute_elem_bytes=0)
+    # all-reduce inside the while: operand 8*64*4 bytes, traffic 2x, x12
+    ar = res["collective_traffic"]["all-reduce"]
+    assert ar == 2 * 8 * 64 * 4 * 12
+    # all-gather in entry: output bytes, x1
+    ag = res["collective_traffic"]["all-gather"]
+    assert ag == 16 * 128 * 4
+    assert res["collective_operand_bytes"]["all-reduce"] == 8 * 64 * 4 * 12
+
+
+def test_dus_counts_update_not_buffer():
+    res = H.analyze(HLO, compute_elem_bytes=0)
+    # the DUS moves 2x the 8x8 update (x12), never the full 8x128 buffer
+    assert res["traffic_bytes"] >= 2 * 8 * 8 * 4 * 12
+    # upper bound: no term should include the full buffer per iteration
+    # except the dot reads; assemble expected components:
+    dot_traffic = (8 * 64 + 8 * 128 + 128 * 64) * 4 * 12
+    dus_traffic = 2 * 8 * 8 * 4 * 12
+    ar_out_and_operand = (8 * 64 * 4) * 2 * 12
+    ag_traffic = (16 * 128 + 8 * 128) * 4
+    expected_max = dot_traffic + dus_traffic + ar_out_and_operand + ag_traffic
+    assert res["traffic_bytes"] <= expected_max + 1
+
+
+def test_control_flow_comps():
+    comps, entry = H.parse_hlo(HLO)
+    cf = H.control_flow_comps(comps, entry)
+    assert cf == {"main.1", "wide.body.1", "cond.1"}
+    assert "sum.1" not in cf  # reduce callee: cost attributed at call site

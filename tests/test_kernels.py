@@ -1,0 +1,124 @@
+"""Pallas kernels vs pure-jnp oracles, interpret mode, shape/dtype sweeps
+(assignment: sweep shapes/dtypes and assert_allclose against ref.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels import ref as R
+from repro.quant import quantize_int8
+
+SHAPES = [
+    # (B, Hq, KV, T, hd, window, cap)
+    (1, 2, 2, 32, 16, 0, 0.0),
+    (2, 4, 2, 64, 16, 0, 0.0),
+    (1, 4, 1, 32, 8, 16, 0.0),     # MQA + window
+    (2, 8, 2, 48, 32, 0, 50.0),    # softcap
+    (1, 2, 2, 40, 64, 24, 30.0),   # window + softcap
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_flash_attention_vs_ref(shape, dtype, rng):
+    B, Hq, KV, T, hd, win, cap = shape
+    q = jnp.asarray(rng.normal(size=(B, T, Hq, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, T, KV, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, T, KV, hd)), dtype)
+    out = ops.flash_attention_btHd(q, k, v, window=win, softcap=cap,
+                                   block_q=16, block_k=16)
+    ref = R.flash_attention_ref(jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+                                jnp.moveaxis(v, 2, 1), window=win, cap=cap)
+    ref = jnp.moveaxis(ref, 1, 2)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_flash_attention_nonmultiple_lengths(rng):
+    """Padding path: T, S not multiples of the block size."""
+    B, Hq, KV, T, hd = 1, 2, 1, 37, 16
+    q = jnp.asarray(rng.normal(size=(B, T, Hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, KV, hd)), jnp.float32)
+    out = ops.flash_attention_btHd(q, k, v, block_q=16, block_k=16)
+    ref = R.flash_attention_ref(jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+                                jnp.moveaxis(v, 2, 1))
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jnp.moveaxis(ref, 1, 2)),
+                               atol=3e-5)
+
+
+@pytest.mark.parametrize("ring", [False, True])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_decode_attention_vs_ref(ring, dtype, rng):
+    B, Hq, KV, S, hd = 2, 4, 2, 64, 16
+    cache_pos = 50
+    q = jnp.asarray(rng.normal(size=(B, 1, Hq, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), dtype)
+    if ring:
+        # ring layout: slot s holds position (cache_pos - window + ...) etc.
+        pos = jnp.asarray((np.arange(S) + 17) % 61, jnp.int32)
+        pos = jnp.where(pos <= cache_pos, pos, -1)
+    else:
+        pos = jnp.asarray(np.where(np.arange(S) <= cache_pos,
+                                   np.arange(S), -1), jnp.int32)
+    out = ops.decode_attention(q, k, v, pos, jnp.int32(cache_pos),
+                               block_s=16)
+    ref = R.decode_attention_ref(q[:, 0], jnp.moveaxis(k, 2, 1),
+                                 jnp.moveaxis(v, 2, 1), pos, cache_pos)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out[:, 0], np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_decode_attention_window(rng):
+    B, Hq, KV, S, hd = 1, 2, 2, 64, 16
+    q = jnp.asarray(rng.normal(size=(B, 1, Hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    pos = jnp.asarray(np.arange(S), jnp.int32)
+    out = ops.decode_attention(q, k, v, pos, jnp.int32(63), window=16,
+                               block_s=16)
+    ref = R.decode_attention_ref(q[:, 0], jnp.moveaxis(k, 2, 1),
+                                 jnp.moveaxis(v, 2, 1), pos, 63, window=16)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(ref),
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("mnk", [(32, 48, 64), (64, 80, 96), (16, 16, 128)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_int8_matmul_vs_ref(mnk, dtype, rng):
+    M, N, K = mnk
+    x = jnp.asarray(rng.normal(size=(M, K)), dtype)
+    w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    wq, sc = quantize_int8(w, axis=0)
+    out = ops.int8_matmul(x, wq, sc.reshape(-1), block_m=16, block_n=16,
+                          block_k=32)
+    ref = R.int8_matmul_ref(x, wq, sc.reshape(-1))
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_int8_quantization_error_small(rng):
+    """End-to-end: int8 matmul approximates the fp32 matmul (paper Fig 6:
+    small accuracy cost for 75% storage saving)."""
+    x = jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(64, 48)), jnp.float32)
+    wq, sc = quantize_int8(w, axis=0)
+    exact = x @ w
+    approx = ops.int8_matmul(x, wq, sc.reshape(-1), block_m=16, block_n=16,
+                             block_k=32)
+    rel = float(jnp.linalg.norm(approx - exact) / jnp.linalg.norm(exact))
+    assert rel < 0.02
+    # storage: int8 + per-col scale vs fp32
+    bytes_q = wq.size + 4 * sc.size
+    assert bytes_q < 0.27 * (w.size * 4)

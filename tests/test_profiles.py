@@ -1,0 +1,44 @@
+"""Welford profile store vs numpy, staleness, priors."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.profiles import OnlineProfile, ProfileStore
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.floats(-1e6, 1e6), min_size=2, max_size=200))
+def test_welford_matches_numpy(xs):
+    p = OnlineProfile()
+    for x in xs:
+        p.update(x)
+    np.testing.assert_allclose(p.mean, np.mean(xs), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(p.std, np.std(xs, ddof=1), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_prior_blending():
+    s = ProfileStore()
+    s.set_prior("m", 100.0, 10.0)
+    mu, sg = s.mu_sigma("m")
+    assert mu == 100.0 and sg == 10.0
+    for _ in range(2):
+        s.record("m", 50.0)
+    mu, _ = s.mu_sigma("m", min_obs=4)  # half weight on observations
+    assert 50.0 < mu < 100.0
+    for _ in range(10):
+        s.record("m", 50.0)
+    mu, _ = s.mu_sigma("m", min_obs=4)
+    assert abs(mu - 50.0) < 8.0
+
+
+def test_staleness_and_dynamic_threshold():
+    s = ProfileStore()
+    s.set_prior("a", 10, 1)
+    s.record("a", 10.0, now=0.0)
+    assert s.staleness("a", now=100.0) == 100.0
+    th = s.dynamic_threshold(["a"], now=100.0, base=10.0, t_device=200.0)
+    assert 10.0 < th <= 200.0
+    # bounded by T_D per the paper
+    th2 = s.dynamic_threshold(["a"], now=1e9, base=10.0, t_device=200.0)
+    assert th2 == 200.0

@@ -1,0 +1,63 @@
+"""int8 quantization + error-feedback properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import (quantize_int8, dequantize_int8, quantize_tree,
+                         dequantize_tree, ef_compress)
+
+
+def test_roundtrip_error_bounded(rng):
+    x = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x)
+    # per-channel max error <= scale/2 (+eps for rounding at the edge)
+    assert float((err - 0.51 * s).max()) <= 0.0
+
+
+def test_storage_saving_75pct(rng):
+    """Paper Fig 6: 8-bit quantization saves ~75% storage."""
+    tree = {"w1": jnp.asarray(rng.normal(size=(128, 64)), jnp.float32),
+            "w2": jnp.asarray(rng.normal(size=(64, 128)), jnp.float32)}
+    qt = quantize_tree(tree, min_size=1)
+    raw = sum(x.size * 4 for x in jax.tree.leaves(tree))
+    packed = 0
+    for leaf in (qt["w1"], qt["w2"]):
+        packed += leaf["q"].size * 1 + leaf["scale"].size * 4
+    assert packed < 0.30 * raw
+    back = dequantize_tree(qt, like=tree)
+    rel = float(jnp.linalg.norm(back["w1"] - tree["w1"])
+                / jnp.linalg.norm(tree["w1"]))
+    assert rel < 0.02
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 1000), steps=st.integers(2, 30))
+def test_error_feedback_unbiased_accumulation(seed, steps):
+    """sum of dequantized ef-compressed xs tracks sum of xs: the residual
+    absorbs the quantization error instead of letting it accumulate."""
+    rng = np.random.default_rng(seed)
+    shape = (8, 16)
+    resid = jnp.zeros(shape, jnp.float32)
+    total_true = np.zeros(shape, np.float32)
+    total_sent = np.zeros(shape, np.float32)
+    for _ in range(steps):
+        x = jnp.asarray(rng.normal(size=shape), jnp.float32)
+        q, s, resid = ef_compress(x, resid)
+        total_true += np.asarray(x)
+        total_sent += np.asarray(dequantize_int8(q, s))
+    # Residual bounds the drift: |sum_true - sum_sent| == |resid|
+    np.testing.assert_allclose(total_true - total_sent, np.asarray(resid),
+                               atol=1e-4)
+    assert float(np.abs(np.asarray(resid)).max()) < 0.1  # one-step error
+
+
+def test_quantize_tree_skips_small_and_1d(rng):
+    tree = {"big": jnp.asarray(rng.normal(size=(64, 64)), jnp.float32),
+            "bias": jnp.asarray(rng.normal(size=(4096,)), jnp.float32)}
+    qt = quantize_tree(tree, min_size=1024)
+    assert isinstance(qt["big"], dict)
+    assert not isinstance(qt["bias"], dict)  # 1-D left alone

@@ -1,0 +1,136 @@
+"""CNNSelect unit tests + hypothesis properties + numpy/jnp agreement."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.selection import (ModelProfile, cnnselect, cnnselect_batch,
+                                  greedy_select, oracle_select)
+from repro.configs.paper_zoo import paper_profiles
+
+
+def mk_profiles(mus, sigmas, accs):
+    return [ModelProfile(f"m{i}", a, m, s)
+            for i, (m, s, a) in enumerate(zip(mus, sigmas, accs))]
+
+
+def test_stage1_picks_most_accurate_feasible(rng):
+    # m1 fast/low-acc, m2 slower/high-acc, m3 too slow.
+    profs = mk_profiles([30, 60, 300], [2, 5, 10], [0.5, 0.8, 0.95])
+    r = cnnselect(profs, t_sla=250, t_input=20, t_threshold=50, rng=rng)
+    # T_U = 210, T_L = 160: m3 fails (300+10 > 210); base = m2.
+    assert r.base_index == 1
+    assert not r.fallback
+
+
+def test_fallback_fastest_when_infeasible(rng):
+    profs = mk_profiles([100, 200], [5, 5], [0.6, 0.9])
+    r = cnnselect(profs, t_sla=50, t_input=10, t_threshold=10, rng=rng)
+    assert r.fallback
+    assert r.base_index == 0
+    assert r.index == 0  # exploration collapses to the fallback
+
+
+def test_base_always_eligible(rng):
+    profs = mk_profiles([30, 60, 90], [2, 5, 7], [0.5, 0.8, 0.9])
+    r = cnnselect(profs, t_sla=400, t_input=20, t_threshold=40, rng=rng)
+    assert r.eligible[r.base_index]
+
+
+def test_paper_zoo_tight_sla_uses_fast_models(rng):
+    profs = paper_profiles()
+    # ~115ms SLA over campus wifi (63ms avg input): budget is tiny.
+    counts = np.zeros(len(profs))
+    for _ in range(200):
+        r = cnnselect(profs, 115, 55, 30, rng)
+        counts[r.index] += 1
+    fast = {i for i, p in enumerate(profs) if p.mu < 40}
+    assert counts[list(fast)].sum() >= 0.9 * counts.sum()
+
+
+def test_convergence_to_most_accurate_at_large_sla(rng):
+    profs = paper_profiles()
+    best = int(np.argmax([p.accuracy for p in profs]))
+    counts = np.zeros(len(profs))
+    for _ in range(200):
+        r = cnnselect(profs, 5000, 60, 50, rng)
+        counts[r.index] += 1
+    assert r.base_index == best
+    assert counts[best] > 0
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    mus=st.lists(st.floats(1, 1000), min_size=2, max_size=8),
+    sigs=st.lists(st.floats(0.1, 100), min_size=8, max_size=8),
+    accs=st.lists(st.floats(0.01, 1.0), min_size=8, max_size=8),
+    t_sla=st.floats(10, 2000),
+    t_input=st.floats(0, 300),
+    t_threshold=st.floats(0, 500),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_properties(mus, sigs, accs, t_sla, t_input, t_threshold, seed):
+    k = len(mus)
+    profs = mk_profiles(mus, sigs[:k], accs[:k])
+    rng = np.random.default_rng(seed)
+    r = cnnselect(profs, t_sla, t_input, t_threshold, rng)
+    # 1. probabilities form a distribution supported on the eligible set
+    assert abs(r.probs.sum() - 1.0) < 1e-6
+    assert (r.probs >= 0).all()
+    assert r.probs[~r.eligible].sum() < 1e-9
+    # 2. the selected model is eligible
+    assert r.eligible[r.index]
+    # 3. the base model is always eligible
+    assert r.eligible[r.base_index]
+    # 4. fallback iff stage-1 constraints infeasible
+    mu = np.array(mus[:k])
+    sg = np.array(sigs[:k])
+    feas = (mu + sg < r.t_up) & (mu - sg < r.t_low)
+    assert r.fallback == (not feas.any())
+    if r.fallback:
+        assert r.index == int(np.argmin(mu))
+    else:
+        # 5. stage-1 base maximizes accuracy among feasible
+        acc = np.array(accs[:k])
+        assert acc[r.base_index] >= acc[feas].max() - 1e-9
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    t_sla=st.floats(50, 2000),
+    t_input=st.floats(0, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_numpy_jnp_agreement(t_sla, t_input, seed):
+    """The vectorized jnp path must agree with the numpy reference on
+    base model, eligibility, and probabilities."""
+    import jax
+
+    profs = paper_profiles()
+    mu = np.array([p.mu for p in profs])
+    sg = np.array([p.sigma for p in profs])
+    acc = np.array([p.accuracy for p in profs])
+    rng = np.random.default_rng(seed)
+    r = cnnselect(profs, t_sla, t_input, 40.0, rng)
+    sel, probs, base = cnnselect_batch(
+        mu, sg, acc, np.array([t_sla]), np.array([t_input]), 40.0,
+        jax.random.PRNGKey(seed))
+    assert int(base[0]) == r.base_index
+    np.testing.assert_allclose(np.asarray(probs[0]), r.probs, atol=1e-4)
+    assert r.eligible[int(sel[0])]
+
+
+def test_greedy_ignores_network():
+    profs = mk_profiles([50, 190], [1, 1], [0.5, 0.9])
+    # Greedy (paper variant) fits mu <= SLA and picks the accurate one
+    # even though 2*T_input pushes it over.
+    assert greedy_select(profs, 200) == 1
+    assert greedy_select(profs, 200, t_input=50, use_network=True) == 0
+
+
+def test_oracle_upper_bound(rng):
+    profs = paper_profiles()
+    realized = np.array([p.mu for p in profs])
+    idx = oracle_select(profs, 400, 60, realized)
+    # oracle never violates if some model fits
+    assert realized[idx] + 120 <= 400

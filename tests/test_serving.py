@@ -1,0 +1,119 @@
+"""Real engine + continuous batcher + CNNSelect server (CPU execution)."""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import reduced_config
+from repro.data import CopyTask
+from repro.models import init_params
+from repro.serving.batching import ContinuousBatcher, Request
+from repro.serving.engine import InferenceEngine
+from repro.serving.server import CNNSelectServer, ServedModel
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = reduced_config("stablelm_1_6b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = InferenceEngine(cfg, params, batch_size=4, max_seq=64)
+    eng.warmup(prompt_len=8)
+    return eng
+
+
+def test_engine_generate_deterministic(engine):
+    prompts = np.random.default_rng(0).integers(
+        0, engine.cfg.vocab, (4, 8), dtype=np.int32)
+    a = engine.generate(prompts, 6)
+    b = engine.generate(prompts, 6)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (4, 6)
+
+
+def test_engine_profile_measures(engine):
+    p = engine.measured_profile(prompt_len=8, n_tokens=4, reps=2)
+    assert p["mu"] > 0 and p["sigma"] >= 0
+
+
+def test_continuous_batcher_slots():
+    b = ContinuousBatcher(batch_size=2, prompt_len=4)
+    reqs = [Request(arrival=float(i), rid=i,
+                    prompt=np.array([1, 2, 3, 4]), max_new_tokens=2)
+            for i in range(3)]
+    for r in reqs:
+        b.submit(r)
+    g = b.form_group(now=10.0)
+    assert len(g) == 2 and b.n_active == 2
+    assert b.form_group(now=10.0) is None  # group must drain first
+    toks = np.array([7, 8])
+    b.record_tokens(toks, now=11.0)
+    b.record_tokens(toks, now=12.0)
+    assert b.n_active == 0 and len(b.done) == 2
+    g2 = b.form_group(now=12.0)
+    assert len(g2) == 1  # third request now scheduled
+    assert b.done[0].tokens == [7, 7]
+
+
+def test_batcher_pad_prompts():
+    b = ContinuousBatcher(batch_size=3, prompt_len=5)
+    b.submit(Request(arrival=0.0, rid=0, prompt=np.array([1, 2])))
+    b.form_group(now=0.0)
+    padded = b.pad_prompts()
+    assert padded.shape == (3, 5)
+    np.testing.assert_array_equal(padded[0, -2:], [1, 2])
+    assert padded[1:].sum() == 0
+
+
+def _mk_server(policy="cnnselect"):
+    models = []
+    for name, arch, acc in [("tiny", "stablelm_1_6b", 0.6),
+                            ("small", "yi_9b", 0.9)]:
+        cfg = reduced_config(arch)
+        if name == "small":
+            import dataclasses
+            cfg = dataclasses.replace(cfg, n_layers=cfg.n_layers * 4,
+                                      d_model=192, n_heads=8, head_dim=24,
+                                      d_ff=512)
+        params = init_params(cfg, jax.random.PRNGKey(1))
+        eng = InferenceEngine(cfg, params, batch_size=1, max_seq=64)
+        models.append(ServedModel(name=name, engine=eng, accuracy=acc))
+    srv = CNNSelectServer(models, t_threshold=40.0, policy=policy,
+                          n_tokens=4)
+    srv.profile_models(prompt_len=8, reps=5)
+    return srv
+
+
+@pytest.fixture(scope="module")
+def server():
+    return _mk_server()
+
+
+def test_server_profiles_separate_models(server):
+    profs = {p.name: p for p in server.current_profiles()}
+    assert profs["small"].mu > profs["tiny"].mu  # bigger model is slower
+
+
+def test_server_selects_by_budget(server):
+    tiny_mu = server.store.mu_sigma("tiny")[0]
+    small_mu = server.store.mu_sigma("small")[0]
+    # budget below small's mu: must pick tiny
+    tight = tiny_mu * 1.5 + 1.0
+    picks = {server.select(t_sla=tight, t_input=0.0) for _ in range(20)}
+    assert picks == {"tiny"}
+    # generous budget: small must appear (and dominate the base choice)
+    loose = small_mu * 4 + 100
+    picks = [server.select(t_sla=loose, t_input=0.0) for _ in range(20)]
+    assert "small" in picks
+
+
+def test_server_handles_request_end_to_end(server):
+    req = Request(arrival=0.0, rid=1,
+                  prompt=np.arange(8, dtype=np.int32) % 50,
+                  t_input_ms=5.0)
+    rec = server.handle(req, t_sla=10_000.0)
+    assert rec["model"] in ("tiny", "small")
+    assert len(rec["tokens"]) == 4
+    assert server.metrics.served == 1
+    s = server.metrics.summary()
+    assert 0.0 <= s["attainment"] <= 1.0

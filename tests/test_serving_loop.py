@@ -1,0 +1,76 @@
+"""Continuous-batching serving loop integration."""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import reduced_config
+from repro.core.selection import ModelProfile
+from repro.models import init_params
+from repro.serving.engine import InferenceEngine
+from repro.serving.batching import Request
+from repro.serving.loop import ServingLoop
+
+
+def _engine(batch_size=2, seed=0):
+    cfg = reduced_config("stablelm_1_6b")
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    eng = InferenceEngine(cfg, params, batch_size=batch_size, max_seq=32)
+    eng.warmup(8)
+    return eng
+
+
+@pytest.fixture(scope="module")
+def loop():
+    return ServingLoop({"m": _engine()})
+
+
+def _reqs(n, rng, sla=1e9):
+    return [Request(arrival=float(i * 5), rid=i,
+                    prompt=rng.integers(0, 50, 6).astype(np.int32),
+                    max_new_tokens=3, sla_ms=sla, t_input_ms=5.0)
+            for i in range(n)]
+
+
+def test_loop_serves_all_requests(loop):
+    rng = np.random.default_rng(0)
+    metrics = loop.run(_reqs(5, rng))
+    s = metrics.summary()
+    assert s["served"] == 5
+    assert s["attainment"] == 1.0  # generous SLA
+    assert all(len(r["model"]) for r in metrics.records)
+    # every request produced its tokens
+    done = loop.batchers["m"].done
+    assert all(len(r.tokens) == 3 for r in done)
+
+
+def test_loop_groups_by_batch_capacity():
+    loop = ServingLoop({"m": _engine()})
+    rng = np.random.default_rng(1)
+    reqs = _reqs(4, rng)
+    for r in reqs:
+        r.arrival = 0.0  # all at once; batch_size=2 -> 2 groups
+    metrics = loop.run(reqs)
+    assert metrics.summary()["served"] == 4
+    # second group queued behind the first
+    q = sorted(r["queue_ms"] for r in metrics.records)
+    assert q[-1] > 0.0
+
+
+def test_loop_routes_with_cnnselect():
+    engines = {"fast": _engine(seed=0), "slow": _engine(seed=1)}
+    profiles = [ModelProfile("fast", accuracy=0.5, mu=5.0, sigma=1.0),
+                ModelProfile("slow", accuracy=0.9, mu=400.0, sigma=10.0)]
+    loop = ServingLoop(engines, profiles=profiles, t_threshold=20.0)
+    rng = np.random.default_rng(2)
+    tight = _reqs(3, rng, sla=40.0)
+    loose = _reqs(3, rng, sla=5000.0)
+    for i, r in enumerate(loose):
+        r.rid = 100 + i
+    loop.run(tight + loose)
+    by_model = {}
+    for rec in loop.metrics.records:
+        by_model.setdefault(rec["model"], []).append(rec["rid"])
+    # tight SLAs must land on the fast engine
+    assert set(by_model.get("fast", [])) >= {0, 1, 2}

@@ -1,0 +1,127 @@
+"""Sharding rule unit tests (no multi-device mesh needed: specs only)."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import param_logical_axes, cache_logical_axes
+from repro.sharding import (ParallelConfig, make_rules, spec_for, tree_specs,
+                            moe_mode_for, SCALAR_AXES)
+from repro.training.optim import adamw, adafactor, constant_schedule
+from repro.training.step import train_state_logical_axes
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+    @property
+    def devices(self):
+        import numpy as np
+        return np.empty(tuple(self.shape.values()))
+
+
+def mk_parallel(profile="train", shape=None):
+    shape = shape or {"data": 16, "model": 16}
+    return ParallelConfig(mesh=FakeMesh(shape), data_axes=("data",),
+                          fsdp_axes=("data",), tp_axis="model",
+                          profile=profile)
+
+
+def test_train_rules_fsdp_tp():
+    cfg = get_config("yi_9b")
+    rules = make_rules(mk_parallel("train"), cfg)
+    assert rules["hidden_in"] == ("data",)
+    assert rules["ff"] == "model"
+    assert rules["heads"] == "model"
+    assert rules["kv_heads"] is None  # yi kv=4 < 16
+    assert rules["cache_seq"] == "model"  # seq-sharded cache instead
+
+
+def test_kv_divisible_shards_heads():
+    cfg = get_config("stablelm_1_6b")  # kv=32
+    rules = make_rules(mk_parallel("serve"), cfg)
+    assert rules["kv_heads"] == "model"
+    assert rules["cache_seq"] is None
+
+
+def test_vocab_padding_restores_sharding():
+    mamba = get_config("mamba2_2_7b")
+    rules = make_rules(mk_parallel("train"), mamba)
+    assert rules["vocab"] == "model"  # padded 50432 divides 16
+    assert mamba.padded_vocab == 50432
+
+
+def test_spec_dedupes_repeated_axes():
+    rules = {"a": ("data", "model"), "b": "model"}
+    s = spec_for(("a", "b"), rules)
+    # "model" already used by dim 0 -> dim 1 gets nothing
+    assert s == P(("data", "model"), None)
+
+
+def test_scalar_axes_sentinel():
+    assert spec_for(SCALAR_AXES, {}) == P()
+
+
+def test_param_spec_tree_structure_matches_params():
+    cfg = get_config("qwen3_moe_235b")
+    axes = param_logical_axes(cfg)
+    specs = tree_specs(axes, mk_parallel("train"), cfg)
+    # same tree structure (empty tail tuple preserved structurally)
+    assert (jax.tree.structure(specs, is_leaf=lambda x: isinstance(x, P))
+            .num_leaves == jax.tree.structure(
+                axes, is_leaf=lambda x: isinstance(x, tuple) and len(x) > 0
+                and all(isinstance(a, (str, type(None))) for a in x)).num_leaves)
+
+
+def test_moe_mode_auto():
+    qwen = get_config("qwen3_moe_235b")
+    grok = get_config("grok_1_314b")
+    par = mk_parallel("train")
+    assert moe_mode_for(qwen, par) == "ep"   # 128 % 16 == 0
+    assert moe_mode_for(grok, par) == "tp"   # 8 < 16
+
+
+def test_grok_tp_mode_expert_specs():
+    grok = get_config("grok_1_314b")
+    axes = param_logical_axes(grok)
+    specs = tree_specs(axes, mk_parallel("train"), grok)
+    wspec = specs["blocks"][0]["w_up"]  # (layers, E, d, ff)
+    assert wspec == P(None, None, ("data",), "model")
+
+
+def test_qwen_ep_mode_expert_specs():
+    qwen = get_config("qwen3_moe_235b")
+    axes = param_logical_axes(qwen)
+    specs = tree_specs(axes, mk_parallel("train"), qwen)
+    wspec = specs["blocks"][0]["w_up"]
+    assert wspec == P(None, "model", ("data",), None)
+
+
+def test_opt_state_specs_cover_every_leaf():
+    cfg = get_config("gemma2_9b")
+    for opt in (adamw(constant_schedule(1e-3)),
+                adafactor(constant_schedule(1e-3))):
+        st_axes = train_state_logical_axes(cfg, opt)
+        specs = tree_specs(st_axes, mk_parallel("train"), cfg)
+        for leaf in jax.tree.leaves(specs,
+                                    is_leaf=lambda x: isinstance(x, P)):
+            assert isinstance(leaf, P)
+
+
+def test_divisibility_of_all_arch_dims():
+    """Every sharded dim of every arch divides the production axes."""
+    from repro.configs import ARCH_IDS
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        assert cfg.d_model % 16 == 0, arch                  # fsdp
+        if cfg.d_ff:
+            assert cfg.d_ff % 16 == 0, arch                 # tp
+        assert cfg.q_heads_padded % 16 == 0 or cfg.ssd, arch
+        assert cfg.padded_vocab % 16 == 0, arch
+        if cfg.moe:
+            tpmode = cfg.moe.n_experts % 16 == 0
+            assert tpmode or cfg.moe.d_ff_expert % 16 == 0, arch

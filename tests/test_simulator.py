@@ -1,0 +1,119 @@
+"""Serving simulator + zoo behaviour (paper §5.2 claims, directional)."""
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_zoo import paper_profiles
+from repro.core.zoo import ModelZoo
+from repro.serving.simulator import SimConfig, simulate, sla_sweep
+from repro.serving.network import NetworkModel, resize_decision
+
+
+def test_cnnselect_attains_earlier_than_greedy():
+    """Paper Fig 13: CNNSelect meets SLAs in a regime where greedy fails."""
+    profs = paper_profiles()
+    for sla in (200, 250):
+        ours = simulate(profs, SimConfig(t_sla=sla, n_requests=1500, seed=2))
+        greedy = simulate(profs, SimConfig(t_sla=sla, n_requests=1500,
+                                           policy="greedy", seed=2))
+        assert ours.attainment > greedy.attainment + 0.1, sla
+
+
+def test_cnnselect_converges_to_greedy_accuracy():
+    profs = paper_profiles()
+    ours = simulate(profs, SimConfig(t_sla=1200, n_requests=1500, seed=2))
+    greedy = simulate(profs, SimConfig(t_sla=1200, n_requests=1500,
+                                       policy="greedy", seed=2))
+    assert ours.accuracy > greedy.accuracy - 0.02
+    assert ours.attainment > 0.97
+
+
+def test_accuracy_monotone_in_sla():
+    profs = paper_profiles()
+    res = sla_sweep(profs, [150, 300, 600, 1200], n_requests=1000, seed=0)
+    accs = [r.accuracy for r in res]
+    assert accs == sorted(accs) or max(
+        a - b for a, b in zip(accs, accs[1:])) < 0.02
+
+
+def test_oracle_dominates_all():
+    profs = paper_profiles()
+    for policy in ("cnnselect", "greedy"):
+        r = simulate(profs, SimConfig(t_sla=300, n_requests=1000,
+                                      policy=policy, seed=1))
+        o = simulate(profs, SimConfig(t_sla=300, n_requests=1000,
+                                      policy="oracle", seed=1))
+        assert o.attainment >= r.attainment - 1e-9
+
+
+def test_selection_histogram_shifts_with_sla():
+    profs = paper_profiles()
+    names = [p.name for p in profs]
+    tight = simulate(profs, SimConfig(t_sla=160, n_requests=1500, seed=0))
+    loose = simulate(profs, SimConfig(t_sla=2000, n_requests=1500, seed=0))
+    h_t = tight.selection_histogram(names)
+    h_l = loose.selection_histogram(names)
+    # tight SLAs favour sub-30ms models; loose favour the accurate ones
+    fast = [p.name for p in profs if p.mu < 30]
+    slow_acc = [p.name for p in profs if p.accuracy > 0.79]
+    assert sum(h_t[n] for n in fast) > 0.7
+    assert sum(h_l[n] for n in slow_acc) > 0.5
+
+
+def test_cold_starts_penalize_unwarmed_zoo():
+    profs = paper_profiles()
+    warm = simulate(profs, SimConfig(t_sla=400, n_requests=400, seed=0,
+                                     prewarm=True))
+    cold = simulate(profs, SimConfig(t_sla=400, n_requests=400, seed=0,
+                                     prewarm=False))
+    assert cold.cold_starts > 0
+    assert warm.cold_starts == 0
+    assert cold.mean_latency >= warm.mean_latency
+
+
+def test_zoo_lru_eviction(rng):
+    profs = paper_profiles()
+    total = sum(p.size_bytes for p in profs)
+    zoo = ModelZoo(memory_budget_bytes=total // 3)
+    for p in profs:
+        zoo.register(p)
+    now = 0.0
+    for i, p in enumerate(profs):
+        zoo.ensure_hot(p.name, now=float(i))
+    # budget respected up to the (unavoidable) size of the newest model
+    biggest = max(p.size_bytes for p in profs)
+    assert zoo.hot_bytes() <= max(total // 3, biggest)
+    # the most-recently-used model must still be hot
+    assert zoo.entries[profs[-1].name].hot
+    assert sum(e.evictions for e in zoo.entries.values()) > 0
+
+
+def test_queueing_increases_latency():
+    profs = paper_profiles()
+    free = simulate(profs, SimConfig(t_sla=400, n_requests=800, seed=0))
+    loaded = simulate(profs, SimConfig(t_sla=400, n_requests=800, seed=0,
+                                       arrival_rate_hz=40.0, n_servers=1))
+    assert loaded.p95_latency >= free.p95_latency
+
+
+def test_hedging_reduces_tail():
+    profs = paper_profiles()
+    base = simulate(profs, SimConfig(t_sla=400, n_requests=800, seed=0,
+                                     arrival_rate_hz=50.0, n_servers=4))
+    hedged = simulate(profs, SimConfig(t_sla=400, n_requests=800, seed=0,
+                                       arrival_rate_hz=50.0, n_servers=4,
+                                       hedge_at_p95=True))
+    assert hedged.p95_latency <= base.p95_latency + 1e-6
+
+
+def test_network_models_ordering(rng):
+    wifi = NetworkModel.named("campus_wifi").sample_t_input(rng, 4000)
+    hot = NetworkModel.named("cellular_hotspot").sample_t_input(rng, 4000)
+    assert hot.mean() > wifi.mean() * 1.5  # paper: ~2x WiFi
+    assert (wifi > 0).all()
+
+
+def test_resize_decision_matches_paper():
+    # paper: images 1..5 (<=226KB) upload directly; large images resize
+    assert not resize_decision(172.0)
+    assert resize_decision(2000.0)
