@@ -9,11 +9,10 @@ run small models locally."""
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 from benchmarks.common import row, load_dryrun_results
-from repro.configs import reduced_config, get_config
-from repro.configs.paper_zoo import DEVICES, TABLE5
+from repro.configs import reduced_config
+from repro.configs.paper_zoo import TABLE5
 from repro.models import init_params
 from repro.serving.engine import InferenceEngine
 

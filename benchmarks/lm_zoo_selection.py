@@ -55,16 +55,20 @@ def run():
                         {"mu_ms": f"{p.mu:.0f}",
                          "quality_proxy": f"{p.accuracy:.2f}"}))
     for sla in (200, 600, 1500, 4000):
-        ours = simulate(profs, SimConfig(t_sla=sla, n_requests=1500,
-                                         t_threshold=100.0, seed=0))
-        grd = simulate(profs, SimConfig(t_sla=sla, n_requests=1500,
-                                        t_threshold=100.0, policy="greedy",
-                                        seed=0))
+        per_policy = {
+            pol: simulate(profs, SimConfig(t_sla=sla, n_requests=1500,
+                                           t_threshold=100.0, policy=pol,
+                                           seed=0))
+            for pol in ("cnnselect", "greedy", "oracle")}
+        ours = per_policy["cnnselect"]
         top = max(ours.selection_histogram([p.name for p in profs]).items(),
                   key=lambda kv: kv[1])
         rows.append(row(f"lmzoo.sla{sla}ms", 0.0,
                         {"ours_att": f"{ours.attainment:.3f}",
-                         "greedy_att": f"{grd.attainment:.3f}",
+                         "greedy_att":
+                         f"{per_policy['greedy'].attainment:.3f}",
+                         "oracle_att":
+                         f"{per_policy['oracle'].attainment:.3f}",
                          "ours_quality": f"{ours.accuracy:.3f}",
                          "top_pick": f"{top[0]}:{top[1]:.2f}"}))
     return rows

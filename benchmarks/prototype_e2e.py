@@ -13,13 +13,14 @@ import numpy as np
 
 from benchmarks.common import row
 from repro.configs import reduced_config
+from repro.core.selection import make_policy
 from repro.models import init_params
 from repro.serving.batching import Request
 from repro.serving.engine import InferenceEngine
 from repro.serving.server import CNNSelectServer, ServedModel
 
 
-def _server():
+def _server(policy="cnnselect"):
     models = []
     cfg_t = reduced_config("stablelm_1_6b")
     cfg_s = dataclasses.replace(reduced_config("stablelm_1_6b"),
@@ -29,20 +30,15 @@ def _server():
         params = init_params(cfg, jax.random.PRNGKey(0))
         eng = InferenceEngine(cfg, params, batch_size=1, max_seq=64)
         models.append(ServedModel(name=name, engine=eng, accuracy=acc))
-    srv = CNNSelectServer(models, t_threshold=30.0, n_tokens=4)
+    srv = CNNSelectServer(models, t_threshold=30.0, n_tokens=4,
+                          policy=policy)
     srv.profile_models(prompt_len=8, reps=3)
     return srv
 
 
-def run(n_requests: int = 12):
-    srv = _server()
-    profs = {p.name: p for p in srv.current_profiles()}
-    rows = [row("fig12.profiles", 0.0,
-                {n: f"{p.mu:.0f}±{p.sigma:.0f}ms" for n, p in profs.items()})]
+def _sweep(srv, slas, n_requests, tag, rows):
     rng = np.random.default_rng(0)
-    tiny_mu = profs["tiny"].mu
-    small_mu = profs["small"].mu
-    for sla in (tiny_mu * 2, (tiny_mu + small_mu) * 1.2, small_mu * 6):
+    for sla in slas:
         srv.metrics = type(srv.metrics)()
         for i in range(n_requests):
             req = Request(arrival=0.0, rid=i,
@@ -50,8 +46,23 @@ def run(n_requests: int = 12):
                           t_input_ms=float(rng.normal(8, 2)))
             srv.handle(req, t_sla=float(sla))
         s = srv.metrics.summary()
-        rows.append(row(f"fig12.sla{int(sla)}ms", s["mean_ms"] * 1000.0,
+        rows.append(row(f"fig12.{tag}.sla{int(sla)}ms", s["mean_ms"] * 1000.0,
                         {"attainment": f"{s['attainment']:.2f}",
                          "accuracy": f"{s['accuracy']:.2f}",
                          "selections": str(s["selections"]).replace(",", "/")}))
+
+
+def run(n_requests: int = 12):
+    srv = _server()
+    profs = {p.name: p for p in srv.current_profiles()}
+    rows = [row("fig12.profiles", 0.0,
+                {n: f"{p.mu:.0f}±{p.sigma:.0f}ms" for n, p in profs.items()})]
+    tiny_mu = profs["tiny"].mu
+    small_mu = profs["small"].mu
+    slas = (tiny_mu * 2, (tiny_mu + small_mu) * 1.2, small_mu * 6)
+    _sweep(srv, slas, n_requests, "cnnselect", rows)
+    # Same engines and profiles, greedy policy hot-swapped through the
+    # registry: the live analogue of the Fig 13 baseline comparison.
+    srv.router.policy = make_policy("greedy")
+    _sweep(srv, slas[1:2], n_requests, "greedy", rows)
     return rows

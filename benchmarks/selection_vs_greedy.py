@@ -6,11 +6,14 @@ the "maintains attainment in X% more cases" aggregate across the
 
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
-from benchmarks.common import row, time_call
+from benchmarks.common import row
 from repro.configs.paper_zoo import paper_profiles
-from repro.serving.simulator import (SimConfig, simulate, sla_sweep,
+from repro.core.selection import CNNSelectPolicy, cnnselect
+from repro.serving.simulator import (SimConfig, simulate,
                                      attainment_improvement)
 
 # Paper Fig 12/13 sweep the 0-500 ms band; attainment target 0.9.
@@ -60,4 +63,34 @@ def run(n_requests: int = 2000):
     top_l = max(loose, key=loose.get)
     rows.append(row("fig13.selection_shift", 0.0,
                     {"tight_top": top_t, "loose_top": top_l}))
+    rows.extend(policy_layer_timing(profs))
     return rows
+
+
+def policy_layer_timing(profs, n: int = 10000):
+    """Wall-clock of the policy layer itself: per-request numpy
+    `cnnselect` vs the chunked jit `select_batch` admission path the
+    simulator now runs on (DESIGN.md §3)."""
+    rng = np.random.default_rng(0)
+    t_sla = rng.uniform(100.0, 600.0, n)
+    t_input = rng.uniform(20.0, 150.0, n)
+
+    t0 = time.perf_counter()
+    for i in range(n):
+        cnnselect(profs, float(t_sla[i]), float(t_input[i]), 50.0, rng)
+    scalar_s = time.perf_counter() - t0
+
+    pol = CNNSelectPolicy(t_threshold=50.0, seed=0)
+    pol.select_batch(profs, t_sla, t_input)      # jit compile warmup
+    t0 = time.perf_counter()
+    pol.select_batch(profs, t_sla, t_input)
+    batch_s = time.perf_counter() - t0
+
+    return [
+        row("policy.scalar_cnnselect", scalar_s / n * 1e6,
+            {"n": n, "total_ms": f"{scalar_s * 1e3:.1f}"}),
+        row("policy.batched_jit", batch_s / n * 1e6,
+            {"n": n, "chunk": pol.chunk,
+             "total_ms": f"{batch_s * 1e3:.1f}",
+             "speedup_x": f"{scalar_s / batch_s:.1f}"}),
+    ]

@@ -5,11 +5,20 @@ online performance profiling, and cold/hot model lifecycle management.
 """
 
 from repro.core.selection import (
+    BatchSelection,
+    CNNSelectPolicy,
+    GreedyPolicy,
     ModelProfile,
+    OraclePolicy,
+    Policy,
+    RandomPolicy,
     SelectionResult,
+    StaticPolicy,
     cnnselect,
     cnnselect_batch,
     greedy_select,
+    make_policy,
+    policy_names,
     static_select,
     random_select,
     oracle_select,
@@ -20,5 +29,8 @@ from repro.core.zoo import ModelZoo, ZooEntry
 __all__ = [
     "ModelProfile", "SelectionResult", "cnnselect", "cnnselect_batch",
     "greedy_select", "static_select", "random_select", "oracle_select",
+    "Policy", "BatchSelection", "CNNSelectPolicy", "GreedyPolicy",
+    "RandomPolicy", "StaticPolicy", "OraclePolicy", "make_policy",
+    "policy_names",
     "OnlineProfile", "ProfileStore", "ModelZoo", "ZooEntry",
 ]

@@ -1,5 +1,8 @@
 """Online model performance profiles (paper: "CNN model performance
 profiles are measured and managed by individual inference servers").
+One `ProfileStore` per admission `Router` (serving/router.py) — the
+stacks feed measured latencies back through `Router.record` and every
+policy decision reads the blended view via `Router.current_profiles`.
 
 Welford's algorithm for numerically stable streaming mean/std, plus a
 staleness clock: `T_threshold` grows with profile staleness when the

@@ -19,12 +19,18 @@ Two implementations, tested for agreement:
   - `cnnselect`: numpy reference, one request.
   - `cnnselect_batch`: vectorized jnp over N requests (the 10k-request
     simulations of §5.2 run through this under jit/vmap).
+
+Both are wrapped by the `Policy` layer (DESIGN.md §2): every selection
+strategy — cnnselect, greedy, greedy_nw, random, static:<name>, oracle —
+is a `Policy` object with scalar `select` and vectorized `select_batch`
+entry points, resolved by name through `make_policy`. The serving stacks
+(server, loop, simulator) all dispatch through this one registry.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -164,6 +170,21 @@ def cnnselect_batch(mu, sigma, acc, t_sla, t_input, t_threshold, key,
     return selected, probs, base
 
 
+_BATCH_JIT = None
+
+
+def _jit_cnnselect_batch():
+    """Process-wide jit of `cnnselect_batch` (stage2_variant is static);
+    compiled once per (chunk, K) shape and shared by every policy
+    instance."""
+    global _BATCH_JIT
+    if _BATCH_JIT is None:
+        import jax
+        _BATCH_JIT = jax.jit(cnnselect_batch,
+                             static_argnames=("stage2_variant",))
+    return _BATCH_JIT
+
+
 # --------------------------------------------------------------------------
 # Baselines (paper §5.2.2 and standard references)
 # --------------------------------------------------------------------------
@@ -202,3 +223,241 @@ def oracle_select(profiles: Sequence[ModelProfile], t_sla: float,
         return int(np.argmin(realized_times))
     masked = np.where(ok, acc, -np.inf)
     return int(np.argmax(masked))
+
+
+# --------------------------------------------------------------------------
+# Policy layer: one object per strategy, one registry for all stacks
+# --------------------------------------------------------------------------
+
+@dataclass
+class BatchSelection:
+    """Vectorized selection over N requests (DESIGN.md §3).
+
+    `probs`/`base`/`eligible` are populated only by probabilistic
+    policies (cnnselect); deterministic baselines fill `indices` alone.
+    """
+    indices: np.ndarray                  # (N,) int
+    probs: Optional[np.ndarray] = None   # (N, K)
+    base: Optional[np.ndarray] = None    # (N,) stage-1 base models
+
+    @property
+    def eligible(self) -> Optional[np.ndarray]:
+        """Exploration sets M_E as a bool (N, K) mask. Utilities are
+        clamped to eps > 0 inside M_E, so the support of probs IS the
+        exploration set — in both the numpy and the jnp implementation."""
+        return None if self.probs is None else self.probs > 0.0
+
+
+class Policy:
+    """A model-selection strategy over a profile zoo.
+
+    `select` answers one request; `select_batch` answers N at once (the
+    simulator's hot path). The default `select_batch` is a python loop
+    over `select`; policies with a vectorized form override it.
+    """
+
+    name: str = "policy"
+
+    def select(self, profiles: Sequence[ModelProfile], t_sla: float,
+               t_input: float, *, realized: Optional[np.ndarray] = None
+               ) -> int:
+        raise NotImplementedError
+
+    def select_batch(self, profiles: Sequence[ModelProfile],
+                     t_sla: np.ndarray, t_input: np.ndarray, *,
+                     realized: Optional[np.ndarray] = None,
+                     detail: bool = False
+                     ) -> Union[np.ndarray, BatchSelection]:
+        t_sla = np.broadcast_to(np.asarray(t_sla, np.float64),
+                                np.shape(t_input))
+        idx = np.array([
+            self.select(profiles, float(t_sla[i]), float(t_input[i]),
+                        realized=None if realized is None else realized[i])
+            for i in range(len(t_input))], dtype=np.int64)
+        return BatchSelection(idx) if detail else idx
+
+
+class CNNSelectPolicy(Policy):
+    """The paper's policy. Scalar path: numpy `cnnselect`. Batch path:
+    the jit'd `cnnselect_batch` Gumbel-max kernel, called on fixed-size
+    chunks so XLA compiles exactly one (chunk, K) program per zoo."""
+
+    name = "cnnselect"
+
+    def __init__(self, *, t_threshold: float = 50.0,
+                 stage2_variant: str = "figure", seed: int = 0,
+                 chunk: int = 2048):
+        self.t_threshold = t_threshold
+        self.stage2_variant = stage2_variant
+        self.seed = seed
+        self.chunk = chunk
+        self.rng = np.random.default_rng(seed)
+        self._key = None                     # lazy jax PRNGKey
+
+    def select(self, profiles, t_sla, t_input, *, realized=None) -> int:
+        r = cnnselect(profiles, t_sla, t_input, self.t_threshold, self.rng,
+                      self.stage2_variant)
+        return r.index
+
+    def select_batch(self, profiles, t_sla, t_input, *, realized=None,
+                     detail: bool = False):
+        import jax
+
+        if self._key is None:
+            self._key = jax.random.PRNGKey(self.seed)
+        mu = np.array([p.mu for p in profiles], np.float32)
+        sg = np.array([p.sigma for p in profiles], np.float32)
+        acc = np.array([p.accuracy for p in profiles], np.float32)
+        t_input = np.asarray(t_input, np.float32)
+        t_sla = np.broadcast_to(np.asarray(t_sla, np.float32),
+                                t_input.shape)
+        N, K = t_input.shape[0], mu.shape[0]
+        fn = _jit_cnnselect_batch()
+        idx = np.empty(N, np.int64)
+        probs = np.empty((N, K), np.float64) if detail else None
+        base = np.empty(N, np.int64) if detail else None
+        for lo in range(0, N, self.chunk):
+            hi = min(lo + self.chunk, N)
+            n = hi - lo
+            # Pad the tail chunk so every call shares one compiled shape.
+            sla_c = np.resize(t_sla[lo:hi], self.chunk)
+            tin_c = np.resize(t_input[lo:hi], self.chunk)
+            self._key, sub = jax.random.split(self._key)
+            sel_c, probs_c, base_c = fn(
+                mu, sg, acc, sla_c, tin_c, self.t_threshold, sub,
+                stage2_variant=self.stage2_variant)
+            idx[lo:hi] = np.asarray(sel_c)[:n]
+            if detail:
+                probs[lo:hi] = np.asarray(probs_c)[:n]
+                base[lo:hi] = np.asarray(base_c)[:n]
+        return BatchSelection(idx, probs, base) if detail else idx
+
+
+class GreedyPolicy(Policy):
+    """Paper baseline; `use_network=True` is the greedy_nw variant that
+    subtracts the observed 2*T_input from the budget."""
+
+    def __init__(self, *, use_network: bool = False):
+        self.use_network = use_network
+        self.name = "greedy_nw" if use_network else "greedy"
+
+    def select(self, profiles, t_sla, t_input, *, realized=None) -> int:
+        return greedy_select(profiles, t_sla, t_input=t_input,
+                             use_network=self.use_network)
+
+    def select_batch(self, profiles, t_sla, t_input, *, realized=None,
+                     detail: bool = False):
+        acc = np.array([p.accuracy for p in profiles])
+        mu = np.array([p.mu for p in profiles])
+        t_input = np.asarray(t_input, np.float64)
+        t_sla = np.broadcast_to(np.asarray(t_sla, np.float64),
+                                t_input.shape)
+        budget = t_sla - (2.0 * t_input if self.use_network else 0.0)
+        ok = mu[None, :] <= budget[:, None]
+        masked = np.where(ok, acc[None, :], -np.inf)
+        idx = np.where(ok.any(axis=1), np.argmax(masked, axis=1),
+                       np.argmin(mu))
+        return BatchSelection(idx) if detail else idx
+
+
+class RandomPolicy(Policy):
+    name = "random"
+
+    def __init__(self, *, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+
+    def select(self, profiles, t_sla, t_input, *, realized=None) -> int:
+        return random_select(profiles, self.rng)
+
+    def select_batch(self, profiles, t_sla, t_input, *, realized=None,
+                     detail: bool = False):
+        idx = self.rng.integers(len(profiles), size=len(t_input))
+        return BatchSelection(idx) if detail else idx
+
+
+class StaticPolicy(Policy):
+    """Always the named model (the paper's per-model static baselines)."""
+
+    def __init__(self, model_name: str):
+        self.model_name = model_name
+        self.name = f"static:{model_name}"
+
+    def _index(self, profiles) -> int:
+        names = [p.name for p in profiles]
+        if self.model_name not in names:
+            raise ValueError(f"static policy: model {self.model_name!r} "
+                             f"not in zoo {names}")
+        return names.index(self.model_name)
+
+    def select(self, profiles, t_sla, t_input, *, realized=None) -> int:
+        return self._index(profiles)
+
+    def select_batch(self, profiles, t_sla, t_input, *, realized=None,
+                     detail: bool = False):
+        idx = np.full(len(t_input), self._index(profiles), np.int64)
+        return BatchSelection(idx) if detail else idx
+
+
+class OraclePolicy(Policy):
+    """Upper bound: sees each request's realized execution times."""
+
+    name = "oracle"
+
+    def select(self, profiles, t_sla, t_input, *, realized=None) -> int:
+        if realized is None:
+            raise ValueError("oracle policy needs realized times")
+        return oracle_select(profiles, t_sla, t_input, realized)
+
+    def select_batch(self, profiles, t_sla, t_input, *, realized=None,
+                     detail: bool = False):
+        if realized is None:
+            raise ValueError("oracle policy needs realized times")
+        acc = np.array([p.accuracy for p in profiles])
+        realized = np.asarray(realized, np.float64)           # (N, K)
+        t_input = np.asarray(t_input, np.float64)
+        t_sla = np.broadcast_to(np.asarray(t_sla, np.float64),
+                                t_input.shape)
+        ok = realized + 2.0 * t_input[:, None] <= t_sla[:, None]
+        masked = np.where(ok, acc[None, :], -np.inf)
+        idx = np.where(ok.any(axis=1), np.argmax(masked, axis=1),
+                       np.argmin(realized, axis=1))
+        return BatchSelection(idx) if detail else idx
+
+
+# Name -> factory(arg, **options). `arg` is the text after ":" in specs
+# like "static:<model>"; options are the shared policy knobs.
+POLICY_REGISTRY: Dict[str, Callable[..., Policy]] = {
+    "cnnselect": lambda arg, **kw: CNNSelectPolicy(
+        t_threshold=kw["t_threshold"], stage2_variant=kw["stage2_variant"],
+        seed=kw["seed"], chunk=kw["chunk"]),
+    "greedy": lambda arg, **kw: GreedyPolicy(use_network=False),
+    "greedy_nw": lambda arg, **kw: GreedyPolicy(use_network=True),
+    "random": lambda arg, **kw: RandomPolicy(seed=kw["seed"]),
+    "static": lambda arg, **kw: StaticPolicy(arg),
+    "oracle": lambda arg, **kw: OraclePolicy(),
+}
+
+
+def policy_names() -> List[str]:
+    return list(POLICY_REGISTRY)
+
+
+def make_policy(spec: Union[str, Policy], *, t_threshold: float = 50.0,
+                stage2_variant: str = "figure", seed: int = 0,
+                chunk: int = 2048) -> Policy:
+    """Resolve a policy spec ("cnnselect", "greedy", "static:<name>", or
+    an already-built Policy) to a Policy instance."""
+    if isinstance(spec, Policy):
+        return spec
+    head, _, arg = spec.partition(":")
+    if head not in POLICY_REGISTRY:
+        raise ValueError(f"unknown policy {spec!r}; "
+                         f"known: {', '.join(policy_names())}")
+    if head == "static" and not arg:
+        raise ValueError("static policy needs a model name: 'static:<name>'")
+    if head != "static" and arg:
+        raise ValueError(f"policy {head!r} takes no ':{arg}' argument "
+                         f"(only static:<name> does)")
+    return POLICY_REGISTRY[head](arg, t_threshold=t_threshold,
+                                 stage2_variant=stage2_variant, seed=seed,
+                                 chunk=chunk)

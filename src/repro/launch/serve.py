@@ -15,6 +15,7 @@ import jax
 import numpy as np
 
 from repro.configs import reduced_config
+from repro.core.selection import make_policy, policy_names
 from repro.models import init_params
 from repro.serving.batching import Request
 from repro.serving.engine import InferenceEngine
@@ -48,13 +49,17 @@ def main():
     ap.add_argument("--sla", type=float, default=250.0)
     ap.add_argument("--network", default="campus_wifi")
     ap.add_argument("--policy", default="cnnselect",
-                    choices=["cnnselect", "greedy", "greedy_nw"])
+                    help="registry spec: one of %s, or static:<name>"
+                    % ", ".join(policy_names()))
     ap.add_argument("--t-threshold", type=float, default=30.0)
     ap.add_argument("--n-tokens", type=int, default=6)
     args = ap.parse_args()
 
+    # Resolve the policy before paying engine-compile time so a bad
+    # spec fails immediately.
+    policy = make_policy(args.policy, t_threshold=args.t_threshold)
     srv = CNNSelectServer(build_default_zoo(), t_threshold=args.t_threshold,
-                          policy=args.policy, n_tokens=args.n_tokens)
+                          policy=policy, n_tokens=args.n_tokens)
     print("profiling zoo...", flush=True)
     srv.profile_models(prompt_len=8, reps=5)
     for p in srv.current_profiles():

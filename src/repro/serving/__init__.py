@@ -1,3 +1,13 @@
 """Serving substrate: network models, the event-driven request simulator
 (paper §5.2 simulations), the real CPU inference engine with KV-cache
-management and continuous batching, and the CNNSelect-fronted server."""
+management and continuous batching, and the CNNSelect-fronted server.
+
+All three serving stacks (batch-of-one server, continuous-batching
+loop, simulator) admit requests through one `Router` (router.py), which
+owns the profile store, cold/warm zoo state, and per-model queues, and
+resolves its selection policy by name from the `core.selection`
+registry. See DESIGN.md §2–3."""
+
+from repro.serving.router import RouteDecision, Router
+
+__all__ = ["Router", "RouteDecision"]

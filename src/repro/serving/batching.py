@@ -9,8 +9,9 @@ the scheduler's job is slot assignment, padding, and retirement."""
 from __future__ import annotations
 
 import heapq
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Deque, List, Optional
 
 import numpy as np
 
@@ -28,6 +29,24 @@ class Request:
     start_exec: float = field(compare=False, default=0.0)
     finish: float = field(compare=False, default=0.0)
     model: str = field(compare=False, default="")
+
+
+class FifoQueue:
+    """Minimal per-model queue with the same `submit` protocol as
+    `ContinuousBatcher` — the Router's default when a stack doesn't
+    attach its own batcher."""
+
+    def __init__(self):
+        self.items: Deque[Request] = deque()
+
+    def submit(self, req: Request):
+        self.items.append(req)
+
+    def pop(self) -> Request:
+        return self.items.popleft()
+
+    def __len__(self) -> int:
+        return len(self.items)
 
 
 class ContinuousBatcher:

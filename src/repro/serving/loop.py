@@ -4,9 +4,11 @@ with per-request SLA accounting and CNNSelect at admission.
 The paper's observation that throughput-batching "may increase waiting
 time of some requests" becomes measurable here: `ServingLoop.run`
 processes an arrival trace and reports queue wait vs execution time per
-request. With `selector`, each GROUP is routed to the model CNNSelect
-picks for the group's tightest effective budget — batching and
-selection compose (beyond-paper: the paper serves batch-of-one)."""
+request. Admission goes through the shared `Router`: the whole trace is
+routed in one vectorized `route_batch` call (the jit'd cnnselect_batch
+path) and lands in the per-model `ContinuousBatcher`s the router owns
+as its queues — batching and selection compose (beyond-paper: the
+paper serves batch-of-one)."""
 
 from __future__ import annotations
 
@@ -15,9 +17,10 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.selection import ModelProfile, cnnselect
+from repro.core.selection import ModelProfile
 from repro.serving.batching import ContinuousBatcher, Request
 from repro.serving.engine import InferenceEngine
+from repro.serving.router import Router
 
 
 @dataclass
@@ -58,28 +61,33 @@ class ServingLoop:
 
     def __init__(self, engines: Dict[str, InferenceEngine],
                  profiles: Optional[List[ModelProfile]] = None,
-                 t_threshold: float = 30.0, seed: int = 0):
+                 t_threshold: float = 30.0, seed: int = 0,
+                 policy="cnnselect"):
         self.engines = engines
-        self.profiles = profiles
-        self.t_threshold = t_threshold
-        self.rng = np.random.default_rng(seed)
         some = next(iter(engines.values()))
         self.batchers = {
             name: ContinuousBatcher(eng.batch_size,
                                     prompt_len=some.max_seq // 4)
             for name, eng in engines.items()}
+        if profiles is None or len(engines) == 1:
+            # Single-engine loop: no selection, everything to one queue.
+            self.router = None
+        else:
+            self.router = Router(profiles, policy=policy,
+                                 t_threshold=t_threshold, seed=seed)
+            for name in self.router.order:
+                self.router.attach_queue(name, self.batchers[name])
         self.metrics = LoopMetrics()
 
-    def _route(self, req: Request) -> str:
-        if self.profiles is None or len(self.engines) == 1:
-            return next(iter(self.engines))
-        r = cnnselect(self.profiles, req.sla_ms or 1e9, req.t_input_ms,
-                      self.t_threshold, self.rng)
-        return self.profiles[r.index].name
-
     def run(self, requests: List[Request]) -> LoopMetrics:
-        for req in sorted(requests, key=lambda r: r.arrival):
-            self.batchers[self._route(req)].submit(req)
+        ordered = sorted(requests, key=lambda r: r.arrival)
+        if self.router is None:
+            only = next(iter(self.engines))
+            for req in ordered:
+                self.batchers[only].submit(req)
+        else:
+            # Vectorized admission: one chunked jit call for the trace.
+            self.router.submit_many(ordered)
         now = 0.0
         # Drain each model's queue in arrival order (virtual clock per
         # model; engines measure real exec time on this host).

@@ -1,0 +1,151 @@
+"""Admission router: the one front door shared by all serving stacks.
+
+The paper evaluates CNNSelect in three settings — a live prototype
+server (batch-of-one), a continuous-batching loop, and 10k-request
+simulations. Pre-refactor each reimplemented the same admission logic:
+read profiles, dispatch on a policy string, pay cold start, enqueue.
+The Router centralizes it (DESIGN.md §3): it owns the online
+`ProfileStore`, the cold/warm `ModelZoo` state, and per-model request
+queues, and answers selection either per request (`route`) or
+vectorized over a whole trace (`route_batch`, which drives the jit'd
+`cnnselect_batch` Gumbel-max path in fixed-size chunks).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.profiles import ProfileStore
+from repro.core.selection import ModelProfile, Policy, make_policy
+from repro.core.zoo import ModelZoo
+from repro.serving.batching import FifoQueue
+
+
+@dataclass
+class RouteDecision:
+    index: int                 # position in the router's model order
+    name: str
+    startup_ms: float = 0.0    # cold-start penalty paid by this request
+
+
+class Router:
+    """Policy-driven admission over a registered model zoo.
+
+    Queues are pluggable: anything with a ``submit(req)`` method can be
+    attached per model (the serving loop attaches its
+    ``ContinuousBatcher``s); the default is a ``FifoQueue``.
+    """
+
+    def __init__(self, profiles: Optional[Sequence[ModelProfile]] = None, *,
+                 policy: Union[str, Policy] = "cnnselect",
+                 t_threshold: float = 50.0, stage2_variant: str = "figure",
+                 seed: int = 0, chunk: int = 2048,
+                 memory_budget_bytes: Optional[int] = None,
+                 min_sigma: float = 0.0):
+        self.policy = make_policy(policy, t_threshold=t_threshold,
+                                  stage2_variant=stage2_variant, seed=seed,
+                                  chunk=chunk)
+        self.store = ProfileStore()
+        self.zoo = ModelZoo(memory_budget_bytes)
+        self.order: List[str] = []
+        self.queues: Dict[str, object] = {}
+        self.min_sigma = min_sigma
+        for p in profiles or []:
+            self.register(p)
+
+    # -- zoo / profile management -----------------------------------------
+
+    def register(self, profile: ModelProfile, *, queue=None):
+        """Add a model. A profile with mu > 0 seeds the store's prior;
+        mu == 0 means "profile online later" (via `set_profile`)."""
+        self.zoo.register(profile)
+        self.order.append(profile.name)
+        self.queues[profile.name] = FifoQueue() if queue is None else queue
+        if profile.mu > 0:
+            self.store.set_prior(profile.name, profile.mu, profile.sigma,
+                                 profile.cold_mu, profile.cold_sigma)
+
+    def attach_queue(self, name: str, queue):
+        self.queues[name] = queue
+
+    def set_profile(self, name: str, mu: float, sigma: float,
+                    cold_mu: float = 0.0, cold_sigma: float = 0.0):
+        """(Re)seed a model's latency prior, e.g. from live measurement."""
+        self.store.set_prior(name, mu, sigma, cold_mu, cold_sigma)
+
+    def record(self, name: str, latency_ms: float, *, cold: bool = False,
+               now: float = 0.0):
+        """Feed one measured latency back into the online profile."""
+        self.store.record(name, latency_ms, cold=cold, now=now)
+
+    def prewarm(self, names: Optional[Sequence[str]] = None):
+        self.zoo.prewarm(list(names) if names is not None else self.order)
+
+    def current_profiles(self) -> List[ModelProfile]:
+        """The live view the policy sees: online mu/sigma blended with
+        the registered accuracy / cold-start / size metadata."""
+        out = []
+        for name in self.order:
+            p = self.zoo.entries[name].profile
+            mu, sg = self.store.mu_sigma(name)
+            out.append(ModelProfile(
+                name=name, accuracy=p.accuracy, mu=mu,
+                sigma=max(sg, self.min_sigma), cold_mu=p.cold_mu,
+                cold_sigma=p.cold_sigma, size_bytes=p.size_bytes))
+        return out
+
+    # -- admission --------------------------------------------------------
+
+    def select(self, t_sla: float, t_input: float, *,
+               realized: Optional[np.ndarray] = None) -> int:
+        """Pure policy decision for one request (no zoo side effects)."""
+        return self.policy.select(self.current_profiles(), t_sla, t_input,
+                                  realized=realized)
+
+    def route(self, t_sla: float, t_input: float, *, now: float = 0.0,
+              realized: Optional[np.ndarray] = None,
+              rng: Optional[np.random.Generator] = None) -> RouteDecision:
+        """Select a model and transition it hot, charging this request
+        the cold-start penalty if it wasn't."""
+        idx = self.select(t_sla, t_input, realized=realized)
+        name = self.order[idx]
+        startup = self.zoo.ensure_hot(name, now, rng)
+        return RouteDecision(idx, name, startup)
+
+    def route_batch(self, t_sla, t_input, *,
+                    realized: Optional[np.ndarray] = None,
+                    detail: bool = False):
+        """Vectorized admission over N requests: one `select_batch` call
+        (chunked jit for cnnselect), no zoo side effects — callers
+        replay cold/warm transitions in event order via `zoo`."""
+        return self.policy.select_batch(
+            self.current_profiles(), np.asarray(t_sla, np.float64),
+            np.asarray(t_input, np.float64), realized=realized,
+            detail=detail)
+
+    def submit(self, req, *, now: float = 0.0) -> RouteDecision:
+        """Route one request and enqueue it on its model's queue."""
+        d = self.route(req.sla_ms or 1e9, req.t_input_ms, now=now)
+        req.model = d.name
+        self.queues[d.name].submit(req)
+        return d
+
+    def submit_many(self, requests: Sequence) -> List[str]:
+        """Vectorized admission of a whole trace: one `route_batch` over
+        the requests' (sla, t_input) vectors, then enqueue in arrival
+        order. Returns the chosen model name per request."""
+        if not requests:
+            return []
+        t_sla = np.array([r.sla_ms or 1e9 for r in requests])
+        t_in = np.array([r.t_input_ms for r in requests])
+        idx = self.route_batch(t_sla, t_in)
+        names = []
+        for r, i in zip(requests, idx):
+            name = self.order[int(i)]
+            r.model = name
+            self.queues[name].submit(r)
+            names.append(name)
+        return names

@@ -1,11 +1,11 @@
 """The CNNSelect-fronted multi-model server (paper §5 end-to-end system).
 
 Manages a zoo of real engines (small models on CPU here; pod-sharded on
-the TPU target), online latency profiles, and per-request model
-selection: estimate the remaining budget from the observed upload time,
-run CNNSelect over the measured profiles, pay cold-start if the chosen
-model is cold, execute, and record SLA attainment + the measured latency
-back into the profile store."""
+the TPU target) and serves each request batch-of-one: estimate the
+remaining budget from the observed upload time, ask the admission
+`Router` (which owns the profile store and the policy object resolved
+from the registry) for a model, execute, and record SLA attainment +
+the measured latency back through the router."""
 
 from __future__ import annotations
 
@@ -15,11 +15,10 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.profiles import ProfileStore
-from repro.core.selection import ModelProfile, cnnselect, greedy_select
-from repro.core.zoo import ModelZoo
+from repro.core.selection import ModelProfile, Policy
 from repro.serving.batching import Request
 from repro.serving.engine import InferenceEngine
+from repro.serving.router import Router
 
 
 @dataclass
@@ -56,17 +55,28 @@ class ServerMetrics:
 
 class CNNSelectServer:
     def __init__(self, models: List[ServedModel], *, t_threshold: float,
-                 policy: str = "cnnselect", seed: int = 0,
+                 policy="cnnselect", seed: int = 0,
                  n_tokens: int = 8, stage2_variant: str = "figure"):
         self.models = {m.name: m for m in models}
         self.order = [m.name for m in models]
-        self.policy = policy
-        self.t_threshold = t_threshold
         self.n_tokens = n_tokens
-        self.stage2_variant = stage2_variant
-        self.store = ProfileStore()
-        self.rng = np.random.default_rng(seed)
+        self.router = Router(policy=policy, t_threshold=t_threshold,
+                             stage2_variant=stage2_variant, seed=seed,
+                             min_sigma=0.5)
+        for m in models:
+            # mu=0: latency priors arrive online via profile_models().
+            self.router.register(ModelProfile(
+                name=m.name, accuracy=m.accuracy, mu=0.0, sigma=0.0,
+                size_bytes=m.size_bytes))
         self.metrics = ServerMetrics()
+
+    @property
+    def store(self):
+        return self.router.store
+
+    @property
+    def policy(self) -> Policy:
+        return self.router.policy
 
     def profile_models(self, prompt_len: int = 16, reps: int = 5):
         """Measure each engine's hot latency (paper: profiles measured and
@@ -74,27 +84,15 @@ class CNNSelectServer:
         for name, m in self.models.items():
             m.engine.warmup(prompt_len)
             p = m.engine.measured_profile(prompt_len, self.n_tokens, reps)
-            self.store.set_prior(name, p["mu"], max(p["sigma"], 0.5))
+            # The router's min_sigma floor owns the clamp.
+            self.router.set_profile(name, p["mu"], p["sigma"])
+        self.router.prewarm()
 
     def current_profiles(self) -> List[ModelProfile]:
-        out = []
-        for name in self.order:
-            mu, sg = self.store.mu_sigma(name)
-            out.append(ModelProfile(name=name,
-                                    accuracy=self.models[name].accuracy,
-                                    mu=mu, sigma=max(sg, 0.5)))
-        return out
+        return self.router.current_profiles()
 
     def select(self, t_sla: float, t_input: float) -> str:
-        profs = self.current_profiles()
-        if self.policy == "cnnselect":
-            r = cnnselect(profs, t_sla, t_input, self.t_threshold, self.rng,
-                          self.stage2_variant)
-            return profs[r.index].name
-        if self.policy == "greedy":
-            return profs[greedy_select(profs, t_sla)].name
-        return profs[greedy_select(profs, t_sla, t_input=t_input,
-                                   use_network=True)].name
+        return self.order[self.router.select(t_sla, t_input)]
 
     def handle(self, req: Request, t_sla: float) -> dict:
         """Serve one request batch-of-one style (the prototype evaluation
@@ -106,7 +104,7 @@ class CNNSelectServer:
         prompts = np.tile(req.prompt[None, :], (B, 1)).astype(np.int32)
         toks = m.engine.generate(prompts, self.n_tokens)
         exec_ms = (time.perf_counter() - t0) * 1000.0
-        self.store.record(name, exec_ms)
+        self.router.record(name, exec_ms)
         e2e = req.t_input_ms * 2.0 + exec_ms
         ok = e2e <= t_sla
         self.metrics.served += 1

@@ -6,19 +6,24 @@ observed upload time and the profile store; the selected model's
 execution time is sampled from its (mu, sigma); cold starts and queueing
 at a fixed-capacity server are modeled; SLA attainment and effective
 accuracy are recorded. Hedged requests (straggler mitigation) optionally
-re-issue to a second replica at the p95 mark."""
+re-issue to a second replica at the p95 mark.
+
+Selection is vectorized (DESIGN.md §3): the whole trace goes through the
+Router's `route_batch` — for cnnselect that is the jit'd
+`cnnselect_batch` Gumbel-max kernel in fixed-size chunks, not 10k
+python-level `cnnselect` calls — and only the cold-start/queueing state
+machine replays per request in event order."""
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core.selection import (ModelProfile, cnnselect, greedy_select,
-                                  oracle_select, random_select)
-from repro.core.zoo import ModelZoo
+from repro.core.selection import ModelProfile, Policy
 from repro.serving.network import NetworkModel
+from repro.serving.router import Router
 
 
 @dataclass
@@ -27,7 +32,9 @@ class SimConfig:
     t_threshold: float = 50.0
     n_requests: int = 10000
     network: str = "campus_wifi"
-    policy: str = "cnnselect"   # cnnselect | greedy | greedy_nw | random | oracle | static:<name>
+    # Any registry spec (cnnselect | greedy | greedy_nw | random | oracle
+    # | static:<name>) or a prebuilt Policy object.
+    policy: Union[str, Policy] = "cnnselect"
     stage2_variant: str = "figure"
     seed: int = 0
     arrival_rate_hz: float = 0.0   # 0 = closed loop (no queueing)
@@ -56,41 +63,25 @@ class SimResult:
         return {n: float(f) for n, f in zip(names, h)}
 
 
-def _select(policy: str, profiles, t_sla, t_input_obs, t_threshold, rng,
-            stage2_variant, realized):
-    if policy == "cnnselect":
-        r = cnnselect(profiles, t_sla, t_input_obs, t_threshold, rng,
-                      stage2_variant)
-        return r.index
-    if policy == "greedy":
-        return greedy_select(profiles, t_sla)
-    if policy == "greedy_nw":
-        return greedy_select(profiles, t_sla, t_input=t_input_obs,
-                             use_network=True)
-    if policy == "random":
-        return random_select(profiles, rng)
-    if policy == "oracle":
-        return oracle_select(profiles, t_sla, t_input_obs, realized)
-    if policy.startswith("static:"):
-        name = policy.split(":", 1)[1]
-        return [p.name for p in profiles].index(name)
-    raise ValueError(policy)
-
-
 def simulate(profiles: Sequence[ModelProfile], cfg: SimConfig) -> SimResult:
     rng = np.random.default_rng(cfg.seed)
     net = NetworkModel.named(cfg.network)
-    zoo = ModelZoo(cfg.memory_budget_bytes)
-    for p in profiles:
-        zoo.register(p)
+    # Decorrelate the policy's RNG stream from the trace rng above —
+    # seeding both with cfg.seed would make e.g. the random baseline's
+    # picks depend on the very draws that generated the workload.
+    policy_seed = int(np.random.SeedSequence([cfg.seed, 1]).generate_state(1)[0])
+    router = Router(profiles, policy=cfg.policy,
+                    t_threshold=cfg.t_threshold,
+                    stage2_variant=cfg.stage2_variant, seed=policy_seed,
+                    memory_budget_bytes=cfg.memory_budget_bytes)
+    zoo = router.zoo
     if cfg.prewarm:
-        zoo.prewarm([p.name for p in profiles])
+        router.prewarm()
 
     N = cfg.n_requests
     t_inputs = net.sample_t_input(rng, N)
     # Pre-sample each model's hypothetical execution time per request so
     # the oracle and the actual run see consistent draws.
-    K = len(profiles)
     exec_samples = np.stack(
         [np.maximum(rng.normal(p.mu, p.sigma + 1e-9, N), 0.1 * p.mu)
          for p in profiles], axis=1)  # (N, K)
@@ -102,16 +93,19 @@ def simulate(profiles: Sequence[ModelProfile], cfg: SimConfig) -> SimResult:
         arrivals = np.zeros(N)
     server_free = np.zeros(cfg.n_servers)
 
-    sel = np.zeros(N, dtype=np.int64)
+    # Vectorized admission: the entire trace in chunked select_batch
+    # calls. Profiles are static within a run, so batching the policy up
+    # front is equivalent to asking it per event.
+    sel = np.asarray(router.route_batch(
+        np.full(N, cfg.t_sla), t_inputs, realized=exec_samples), np.int64)
+
     lat = np.zeros(N)
     hedges = 0
     now = 0.0
     for i in range(N):
         now = arrivals[i]
         ti = t_inputs[i]
-        idx = _select(cfg.policy, profiles, cfg.t_sla, ti, cfg.t_threshold,
-                      rng, cfg.stage2_variant, exec_samples[i])
-        sel[i] = idx
+        idx = sel[i]
         startup = zoo.ensure_hot(profiles[idx].name, now, rng)
         exec_t = exec_samples[i, idx] + startup
         if cfg.arrival_rate_hz > 0:

@@ -1,0 +1,183 @@
+"""Policy registry + Router: the shared admission layer of all three
+serving stacks, and the scalar/batched agreement that pins the jit'd
+`cnnselect_batch` path to the paper's numpy semantics."""
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_zoo import paper_profiles
+from repro.core.selection import (CNNSelectPolicy, GreedyPolicy,
+                                  ModelProfile, OraclePolicy, Policy,
+                                  RandomPolicy, StaticPolicy, cnnselect,
+                                  make_policy, policy_names)
+from repro.serving.batching import Request
+from repro.serving.router import Router
+
+
+def random_zoo(rng, k):
+    mu = np.sort(rng.uniform(10.0, 500.0, k))
+    sg = rng.uniform(1.0, 30.0, k)
+    acc = np.sort(rng.uniform(0.3, 0.99, k))  # slower models more accurate
+    return [ModelProfile(f"m{i}", float(acc[i]), float(mu[i]), float(sg[i]))
+            for i in range(k)]
+
+
+# -- registry --------------------------------------------------------------
+
+def test_registry_resolves_every_name():
+    for name in policy_names():
+        spec = name if name != "static" else "static:mobilenetv1_025"
+        p = make_policy(spec, t_threshold=40.0, seed=0)
+        assert isinstance(p, Policy)
+        assert p.name == spec or p.name == name
+
+
+def test_registry_types():
+    assert isinstance(make_policy("cnnselect"), CNNSelectPolicy)
+    assert isinstance(make_policy("greedy"), GreedyPolicy)
+    assert isinstance(make_policy("greedy_nw"), GreedyPolicy)
+    assert make_policy("greedy_nw").use_network
+    assert isinstance(make_policy("random"), RandomPolicy)
+    assert isinstance(make_policy("oracle"), OraclePolicy)
+    assert isinstance(make_policy("static:x"), StaticPolicy)
+
+
+def test_registry_rejects_unknown_and_passthrough():
+    with pytest.raises(ValueError, match="unknown policy"):
+        make_policy("nope")
+    with pytest.raises(ValueError, match="static"):
+        make_policy("static")
+    p = CNNSelectPolicy(t_threshold=10.0)
+    assert make_policy(p) is p
+
+
+# -- scalar vs batched agreement (pins the refactor to paper semantics) ----
+
+@pytest.mark.parametrize("stage2_variant", ["figure", "text"])
+@pytest.mark.parametrize("zoo_seed", [0, 1, 2])
+def test_cnnselect_scalar_batch_agreement(stage2_variant, zoo_seed):
+    """`cnnselect` (numpy, per-request) and `cnnselect_batch` (jit,
+    via Policy.select_batch) must pick identical stage-1 base models and
+    identical exploration sets M_E for the same requests."""
+    rng = np.random.default_rng(zoo_seed)
+    profs = random_zoo(rng, k=3 + zoo_seed * 2)
+    n = 64
+    t_sla = rng.uniform(40.0, 1500.0, n)
+    t_input = rng.uniform(0.0, 200.0, n)
+    pol = CNNSelectPolicy(t_threshold=40.0, stage2_variant=stage2_variant,
+                          seed=zoo_seed, chunk=32)  # force >1 chunk
+    batch = pol.select_batch(profs, t_sla, t_input, detail=True)
+    for i in range(n):
+        r = cnnselect(profs, float(t_sla[i]), float(t_input[i]), 40.0,
+                      np.random.default_rng(0), stage2_variant)
+        assert int(batch.base[i]) == r.base_index, i
+        np.testing.assert_array_equal(batch.eligible[i], r.eligible,
+                                      err_msg=f"request {i}")
+        np.testing.assert_allclose(batch.probs[i], r.probs, atol=1e-4)
+        assert r.eligible[int(batch.indices[i])]
+
+
+def test_cnnselect_agreement_on_paper_zoo():
+    profs = paper_profiles()
+    rng = np.random.default_rng(3)
+    t_sla = rng.uniform(60.0, 2000.0, 128)
+    t_input = rng.uniform(10.0, 150.0, 128)
+    pol = CNNSelectPolicy(t_threshold=40.0, seed=0)
+    batch = pol.select_batch(profs, t_sla, t_input, detail=True)
+    for i in range(128):
+        r = cnnselect(profs, float(t_sla[i]), float(t_input[i]), 40.0,
+                      np.random.default_rng(0))
+        assert int(batch.base[i]) == r.base_index
+        np.testing.assert_array_equal(batch.eligible[i], r.eligible)
+
+
+def test_chunking_invariant():
+    """Base models / exploration sets must not depend on the chunk size
+    (only the Gumbel draws may differ)."""
+    profs = paper_profiles()
+    rng = np.random.default_rng(5)
+    t_sla = rng.uniform(100.0, 1000.0, 100)
+    t_input = rng.uniform(10.0, 120.0, 100)
+    a = CNNSelectPolicy(seed=0, chunk=16).select_batch(
+        profs, t_sla, t_input, detail=True)
+    b = CNNSelectPolicy(seed=0, chunk=128).select_batch(
+        profs, t_sla, t_input, detail=True)
+    np.testing.assert_array_equal(a.base, b.base)
+    np.testing.assert_array_equal(a.eligible, b.eligible)
+    np.testing.assert_allclose(a.probs, b.probs, atol=1e-6)
+
+
+@pytest.mark.parametrize("spec", ["greedy", "greedy_nw", "oracle",
+                                  "static:m1"])
+def test_baseline_batch_matches_scalar(spec):
+    rng = np.random.default_rng(11)
+    profs = random_zoo(rng, 5)
+    n = 40
+    t_sla = rng.uniform(50.0, 1200.0, n)
+    t_input = rng.uniform(0.0, 150.0, n)
+    realized = rng.uniform(10.0, 500.0, (n, 5))
+    pol = make_policy(spec, seed=0)
+    batch = pol.select_batch(profs, t_sla, t_input, realized=realized)
+    for i in range(n):
+        assert int(batch[i]) == pol.select(
+            profs, float(t_sla[i]), float(t_input[i]),
+            realized=realized[i]), (spec, i)
+
+
+# -- Router ----------------------------------------------------------------
+
+def test_router_owns_store_zoo_queues():
+    profs = paper_profiles()
+    r = Router(profs, policy="greedy", t_threshold=40.0)
+    assert r.order == [p.name for p in profs]
+    assert set(r.queues) == set(r.order)
+    # priors seeded from the registered profiles
+    mu, sg = r.store.mu_sigma(profs[0].name)
+    assert mu == profs[0].mu and sg == profs[0].sigma
+
+
+def test_router_route_pays_cold_start_once():
+    profs = paper_profiles(["squeezenet", "inceptionv4"])
+    r = Router(profs, policy="static:inceptionv4")
+    d1 = r.route(1e9, 0.0, now=0.0)
+    d2 = r.route(1e9, 0.0, now=1.0)
+    assert d1.name == "inceptionv4"
+    assert d1.startup_ms > 0.0      # cold on first touch
+    assert d2.startup_ms == 0.0     # hot after
+    assert r.zoo.total_cold_starts == 1
+
+
+def test_router_online_profiles_shift_selection():
+    profs = [ModelProfile("a", 0.6, 30.0, 2.0),
+             ModelProfile("b", 0.9, 60.0, 3.0)]
+    r = Router(profs, policy="greedy")
+    assert r.order[r.select(t_sla=70.0, t_input=0.0)] == "b"
+    # b's measured latency degrades far past the SLA -> greedy flips to a
+    for _ in range(10):
+        r.record("b", 500.0)
+    assert r.order[r.select(t_sla=70.0, t_input=0.0)] == "a"
+
+
+def test_router_submit_many_fills_queues():
+    profs = [ModelProfile("fast", 0.5, 5.0, 1.0),
+             ModelProfile("slow", 0.9, 400.0, 10.0)]
+    r = Router(profs, policy="cnnselect", t_threshold=20.0, seed=0)
+    reqs = [Request(arrival=float(i), rid=i, prompt=np.arange(4),
+                    sla_ms=40.0 if i < 3 else 5000.0, t_input_ms=5.0)
+            for i in range(6)]
+    names = r.submit_many(reqs)
+    assert len(names) == 6
+    # tight-SLA requests must land on the fast model's queue
+    assert [q.rid for q in r.queues["fast"].items][:3] == [0, 1, 2]
+    assert all(req.model in ("fast", "slow") for req in reqs)
+    assert sum(len(q) for q in r.queues.values()) == 6
+
+
+def test_router_batch_and_scalar_same_profiles_view():
+    profs = paper_profiles()
+    r = Router(profs, policy="greedy")
+    t_sla = np.array([200.0, 2000.0])
+    t_in = np.array([60.0, 60.0])
+    idx = r.route_batch(t_sla, t_in)
+    assert int(idx[0]) == r.select(200.0, 60.0)
+    assert int(idx[1]) == r.select(2000.0, 60.0)

@@ -1,0 +1,96 @@
+"""Hypothesis property tests (selection invariants, Welford vs numpy,
+error-feedback quantization). Split out of the per-module test files so
+the tier-1 suite collects cleanly without the optional `hypothesis`
+dependency (install via the `test` extra)."""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.profiles import OnlineProfile
+from repro.core.selection import ModelProfile, cnnselect
+
+
+def mk_profiles(mus, sigmas, accs):
+    return [ModelProfile(f"m{i}", a, m, s)
+            for i, (m, s, a) in enumerate(zip(mus, sigmas, accs))]
+
+
+# -- CNNSelect invariants (from test_selection.py) -------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(
+    mus=st.lists(st.floats(1, 1000), min_size=2, max_size=8),
+    sigs=st.lists(st.floats(0.1, 100), min_size=8, max_size=8),
+    accs=st.lists(st.floats(0.01, 1.0), min_size=8, max_size=8),
+    t_sla=st.floats(10, 2000),
+    t_input=st.floats(0, 300),
+    t_threshold=st.floats(0, 500),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_properties(mus, sigs, accs, t_sla, t_input, t_threshold, seed):
+    k = len(mus)
+    profs = mk_profiles(mus, sigs[:k], accs[:k])
+    rng = np.random.default_rng(seed)
+    r = cnnselect(profs, t_sla, t_input, t_threshold, rng)
+    # 1. probabilities form a distribution supported on the eligible set
+    assert abs(r.probs.sum() - 1.0) < 1e-6
+    assert (r.probs >= 0).all()
+    assert r.probs[~r.eligible].sum() < 1e-9
+    # 2. the selected model is eligible
+    assert r.eligible[r.index]
+    # 3. the base model is always eligible
+    assert r.eligible[r.base_index]
+    # 4. fallback iff stage-1 constraints infeasible
+    mu = np.array(mus[:k])
+    sg = np.array(sigs[:k])
+    feas = (mu + sg < r.t_up) & (mu - sg < r.t_low)
+    assert r.fallback == (not feas.any())
+    if r.fallback:
+        assert r.index == int(np.argmin(mu))
+    else:
+        # 5. stage-1 base maximizes accuracy among feasible
+        acc = np.array(accs[:k])
+        assert acc[r.base_index] >= acc[feas].max() - 1e-9
+
+
+# -- Welford profile store (from test_profiles.py) -------------------------
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.floats(-1e6, 1e6), min_size=2, max_size=200))
+def test_welford_matches_numpy(xs):
+    p = OnlineProfile()
+    for x in xs:
+        p.update(x)
+    np.testing.assert_allclose(p.mean, np.mean(xs), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(p.std, np.std(xs, ddof=1), rtol=1e-5,
+                               atol=1e-5)
+
+
+# -- int8 error feedback (from test_quant.py) ------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 1000), steps=st.integers(2, 30))
+def test_error_feedback_unbiased_accumulation(seed, steps):
+    """sum of dequantized ef-compressed xs tracks sum of xs: the residual
+    absorbs the quantization error instead of letting it accumulate."""
+    import jax.numpy as jnp
+
+    from repro.quant import dequantize_int8, ef_compress
+
+    rng = np.random.default_rng(seed)
+    shape = (8, 16)
+    resid = jnp.zeros(shape, jnp.float32)
+    total_true = np.zeros(shape, np.float32)
+    total_sent = np.zeros(shape, np.float32)
+    for _ in range(steps):
+        x = jnp.asarray(rng.normal(size=shape), jnp.float32)
+        q, s, resid = ef_compress(x, resid)
+        total_true += np.asarray(x)
+        total_sent += np.asarray(dequantize_int8(q, s))
+    # Residual bounds the drift: |sum_true - sum_sent| == |resid|
+    np.testing.assert_allclose(total_true - total_sent, np.asarray(resid),
+                               atol=1e-4)
+    assert float(np.abs(np.asarray(resid)).max()) < 0.1  # one-step error
