@@ -1,0 +1,108 @@
+"""Fig 10 extended to *time-varying* mobile networks (beyond-paper;
+the MDInference/ModiPick regime): regime-switching Markov networks and
+trace replay wreck policies that budget from stationary means, and the
+online T_input estimators recover most of the lost SLA attainment.
+(Known nuance, visible in the rows: on `lte_outages` the stationary
+mean is dragged up by the outage state and is accidentally
+conservative, so the mean-tracking EWMA trades a little attainment for
+accuracy there while the conservative rolling-p90 matches the mean
+variant — the handoff/congestion/trace scenarios are where online
+estimation wins outright.)
+
+Rows:
+- ``dyn.<scenario>.<policy>`` — overall + per-regime attainment for
+  cnnselect under each budget source (observed / stationary-mean /
+  ewma / rolling-p90) vs the greedy / static baselines.
+- ``dyn.trace.*`` — the same contrast on a replayed wifi->lte step
+  trace.
+- ``dyn.overhead`` — 10k-request simulation wall-clock with and
+  without an estimator attached (the acceptance bar is ~1.2x the plain
+  chunked-admission path).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import row, time_call
+from repro.configs.paper_zoo import paper_profiles
+from repro.serving.simulator import SimConfig, simulate
+
+SCENARIOS = ("wifi_lte_handoff", "wifi_congestion_bursts", "lte_outages")
+
+# (label, policy, t_estimator): cnnselect under each budget source,
+# then the paper baselines (greedy ignores the network entirely).
+VARIANTS = (
+    ("cnnselect+obs", "cnnselect", None),
+    ("cnnselect+mean", "cnnselect", "mean"),
+    ("cnnselect+ewma", "cnnselect", "ewma:0.2"),
+    ("cnnselect+p90", "cnnselect", "pctl:90"),
+    ("greedy", "greedy", None),
+    ("greedy_nw", "greedy_nw", None),
+    ("static:mnv1_10", "static:mobilenetv1_10", None),
+)
+
+
+def _variant_rows(tag: str, network, t_sla: float, n_requests: int,
+                  seed: int):
+    rows, att = [], {}
+    for label, policy, est in VARIANTS:
+        r = simulate(paper_profiles(), SimConfig(
+            t_sla=t_sla, n_requests=n_requests, network=network,
+            policy=policy, t_estimator=est, seed=seed))
+        att[label] = r.attainment
+        per = {f"att[{k}]": f"{v['attainment']:.3f}"
+               for k, v in r.per_regime().items()}
+        rows.append(row(f"{tag}.{label}", 0.0, {
+            "attainment": f"{r.attainment:.3f}",
+            "accuracy": f"{r.accuracy:.3f}",
+            "p95_ms": f"{r.p95_latency:.1f}", **per}))
+    # The headline contrast: online estimation vs stationary-mean
+    # budgeting under the same time-varying network.
+    rows.append(row(f"{tag}.ewma_vs_mean", 0.0, {
+        "ewma_att": f"{att['cnnselect+ewma']:.3f}",
+        "mean_att": f"{att['cnnselect+mean']:.3f}",
+        "recovered": f"{att['cnnselect+ewma'] - att['cnnselect+mean']:.3f}",
+        "ewma_ge_mean": att["cnnselect+ewma"] >= att["cnnselect+mean"]}))
+    return rows
+
+
+def overhead_rows(n_requests: int = 10000):
+    """Isolate each cost: stationary no-estimator (the pre-refactor
+    path), the Markov trace alone, then the Markov trace + estimator —
+    `est_over_markov_x` is the estimator's own overhead and
+    `total_over_plain_x` is the whole dynamic path vs the plain one
+    (the ISSUE's ~1.2x acceptance bar)."""
+    profs = paper_profiles()
+    cfg = dict(t_sla=300.0, n_requests=n_requests, seed=0)
+    plain_us, _ = time_call(
+        lambda: simulate(profs, SimConfig(**cfg)), reps=5)
+    markov_us, _ = time_call(
+        lambda: simulate(profs, SimConfig(**cfg,
+                                          network="wifi_lte_handoff")),
+        reps=5)
+    out = []
+    for est in ("ewma:0.2", "pctl:90"):
+        est_us, _ = time_call(
+            lambda: simulate(profs, SimConfig(
+                **cfg, network="wifi_lte_handoff", t_estimator=est)),
+            reps=5)
+        out.append(row("dyn.overhead", 0.0, {
+            "estimator": est, "n": n_requests,
+            "plain_ms": f"{plain_us / 1e3:.1f}",
+            "markov_ms": f"{markov_us / 1e3:.1f}",
+            "dynamic_ms": f"{est_us / 1e3:.1f}",
+            "est_over_markov_x": f"{est_us / markov_us:.2f}",
+            "total_over_plain_x": f"{est_us / plain_us:.2f}"}))
+    return out
+
+
+def run(n_requests: int = 4000):
+    rows = []
+    for scenario in SCENARIOS:
+        rows.extend(_variant_rows(f"dyn.{scenario}", scenario,
+                                  t_sla=320.0, n_requests=n_requests,
+                                  seed=3))
+    rows.extend(_variant_rows("dyn.trace.wifi_lte_step",
+                              "trace:wifi_lte_step", t_sla=320.0,
+                              n_requests=n_requests, seed=3))
+    rows.extend(overhead_rows())
+    return rows

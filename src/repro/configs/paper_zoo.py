@@ -48,6 +48,68 @@ NETWORKS = {
     "edge_wired": dict(mean=20.0, std=5.0),
 }
 
+# Extra regime states for the time-varying processes (beyond the paper's
+# stationary measurements): degraded/congested variants of the measured
+# networks and a near-outage state (MDInference's "variable mobile
+# network" regime).
+NETWORK_STATES = {
+    "congested_wifi": dict(mean=190.0, std=85.0),
+    "degraded_lte": dict(mean=260.0, std=110.0),
+    "outage": dict(mean=900.0, std=250.0),
+}
+
+# Named regime-switching scenarios for `serving.network.MarkovProcess`:
+# states are NETWORKS/NETWORK_STATES names, `transition` is the
+# per-request row-stochastic matrix. Diagonals near 1 give realistic
+# multi-hundred-request dwells at the simulator's request granularity.
+NETWORK_SCENARIOS = {
+    # Device walks out of WiFi coverage and hands off to LTE (and back).
+    "wifi_lte_handoff": dict(
+        states=("campus_wifi", "lte"),
+        transition=((0.998, 0.002),
+                    (0.002, 0.998)),
+        start=0),
+    # Mostly-good WiFi with short heavy congestion bursts.
+    "wifi_congestion_bursts": dict(
+        states=("campus_wifi", "congested_wifi"),
+        transition=((0.99, 0.01),
+                    (0.08, 0.92)),
+        start=0),
+    # LTE that occasionally collapses toward an outage and recovers
+    # through a degraded state.
+    "lte_outages": dict(
+        states=("lte", "degraded_lte", "outage"),
+        transition=((0.995, 0.004, 0.001),
+                    (0.050, 0.930, 0.020),
+                    (0.020, 0.180, 0.800)),
+        start=0),
+}
+
+
+def synthetic_trace(name: str, n: int = 2048):
+    """Synthetic mean-T_input traces (ms per request position) for
+    `serving.network.TraceReplayProcess`:
+
+    - ``wifi_lte_step``: abrupt campus_wifi -> lte handoff mid-trace.
+    - ``diurnal``: smooth sinusoidal load swing between WiFi-like and
+      hotspot-like conditions (a day of varying congestion).
+    - ``sawtooth_congestion``: repeated build-up/clear congestion ramps.
+    """
+    i = np.arange(n)
+    wifi, lte = NETWORKS["campus_wifi"]["mean"], NETWORKS["lte"]["mean"]
+    hotspot = NETWORKS["cellular_hotspot"]["mean"]
+    if name == "wifi_lte_step":
+        return np.where(i < n // 2, wifi, lte).astype(np.float64)
+    if name == "diurnal":
+        mid, amp = (hotspot + wifi) / 2.0, (hotspot - wifi) / 2.0
+        return mid + amp * np.sin(2.0 * np.pi * i / n)
+    if name == "sawtooth_congestion":
+        period = max(n // 8, 1)
+        ramp = (i % period) / period
+        return wifi + (hotspot - wifi) * ramp
+    raise ValueError(f"unknown synthetic trace {name!r}; known: "
+                     f"wifi_lte_step, diurnal, sawtooth_congestion")
+
 # On-device end-to-end inference (ms), Fig 5/6 & Table 4 (hot model).
 DEVICES = {
     "pixel2": {"mobilenetv1_025": 133.0, "mobilenetv1_10": 352.0,
@@ -70,11 +132,20 @@ def paper_profiles(subset=None):
     return out
 
 
+def lognormal_params(mean, std):
+    """(mu, sigma) of the lognormal matched to the given mean/std.
+    Accepts scalars or arrays (per-request regime parameters); the one
+    implementation shared by `sample_network` and every
+    `serving.network.NetworkProcess` — the bit-for-bit legacy-draw
+    guarantee depends on there being exactly one copy of this math."""
+    mean = np.asarray(mean, np.float64)
+    var = np.asarray(std, np.float64) ** 2
+    sigma2 = np.log(1.0 + var / mean ** 2)
+    return np.log(mean) - sigma2 / 2.0, np.sqrt(sigma2)
+
+
 def sample_network(name: str, rng: np.random.Generator, n: int = 1):
     """Sample T_input (ms): lognormal matched to (mean, std)."""
     d = NETWORKS[name]
-    mean, std = d["mean"], d["std"]
-    var = std ** 2
-    sigma2 = np.log(1.0 + var / mean ** 2)
-    mu = np.log(mean) - sigma2 / 2.0
-    return rng.lognormal(mu, np.sqrt(sigma2), size=n)
+    mu, sigma = lognormal_params(d["mean"], d["std"])
+    return rng.lognormal(mu, sigma, size=n)

@@ -36,6 +36,19 @@ import numpy as np
 
 _EPS = 1e-9
 
+# Paper's conservative network-time estimate: responses are small text
+# labels, so T_nw = 2 * T_input (upload + equal-cost download).
+T_NW_FACTOR = 2.0
+
+
+def network_budget(t_sla, t_input, factor: float = T_NW_FACTOR):
+    """Execution-time budget left after network time:
+    ``T_budget = T_sla - factor * T_input``. `t_input` is whatever the
+    serving stack budgets with — the observed upload time (paper) or an
+    online `TInputEstimator` output (time-varying networks, DESIGN.md
+    §9). Works on scalars, numpy, and jnp arrays."""
+    return t_sla - factor * t_input
+
 
 @dataclass(frozen=True)
 class ModelProfile:
@@ -61,7 +74,7 @@ class SelectionResult:
 
 
 def _limits(t_sla: float, t_input: float, t_threshold: float):
-    t_budget = t_sla - 2.0 * t_input
+    t_budget = network_budget(t_sla, t_input)
     t_up = t_budget
     t_low = t_up - t_threshold
     return t_budget, t_low, t_up
@@ -132,7 +145,7 @@ def cnnselect_batch(mu, sigma, acc, t_sla, t_input, t_threshold, key,
     t_input = jnp.asarray(t_input, jnp.float32)
     K = mu.shape[0]
 
-    t_up = (t_sla - 2.0 * t_input)[:, None]          # (N,1)
+    t_up = network_budget(t_sla, t_input)[:, None]   # (N,1)
     t_low = t_up - t_threshold
 
     feasible = (mu + sg < t_up) & (mu - sg < t_low)  # (N,K)
@@ -194,7 +207,7 @@ def greedy_select(profiles: Sequence[ModelProfile], t_sla: float,
     """Paper's greedy: the most accurate model whose mean time fits the
     SLA. It ignores network-time variability (use_network=False) — the
     key weakness CNNSelect addresses."""
-    budget = t_sla - (2.0 * t_input if use_network else 0.0)
+    budget = network_budget(t_sla, t_input) if use_network else t_sla
     acc = np.array([p.accuracy for p in profiles])
     mu = np.array([p.mu for p in profiles])
     ok = mu <= budget
@@ -218,7 +231,7 @@ def oracle_select(profiles: Sequence[ModelProfile], t_sla: float,
     """Upper bound: knows each model's realized execution time for this
     request; picks the most accurate that meets the SLA end-to-end."""
     acc = np.array([p.accuracy for p in profiles])
-    ok = realized_times + 2.0 * t_input <= t_sla
+    ok = realized_times <= network_budget(t_sla, t_input)
     if not ok.any():
         return int(np.argmin(realized_times))
     masked = np.where(ok, acc, -np.inf)
@@ -352,7 +365,8 @@ class GreedyPolicy(Policy):
         t_input = np.asarray(t_input, np.float64)
         t_sla = np.broadcast_to(np.asarray(t_sla, np.float64),
                                 t_input.shape)
-        budget = t_sla - (2.0 * t_input if self.use_network else 0.0)
+        budget = network_budget(t_sla, t_input) if self.use_network \
+            else t_sla
         ok = mu[None, :] <= budget[:, None]
         masked = np.where(ok, acc[None, :], -np.inf)
         idx = np.where(ok.any(axis=1), np.argmax(masked, axis=1),
@@ -417,7 +431,7 @@ class OraclePolicy(Policy):
         t_input = np.asarray(t_input, np.float64)
         t_sla = np.broadcast_to(np.asarray(t_sla, np.float64),
                                 t_input.shape)
-        ok = realized + 2.0 * t_input[:, None] <= t_sla[:, None]
+        ok = realized <= network_budget(t_sla, t_input)[:, None]
         masked = np.where(ok, acc[None, :], -np.inf)
         idx = np.where(ok.any(axis=1), np.argmax(masked, axis=1),
                        np.argmin(realized, axis=1))

@@ -8,6 +8,12 @@ owns the profile store, cold/warm zoo state, and per-model queues, and
 resolves its selection policy by name from the `core.selection`
 registry. See DESIGN.md §2–3."""
 
+from repro.serving.network import (MarkovProcess, NetworkProcess,
+                                   StationaryProcess, TInputEstimator,
+                                   TraceReplayProcess, make_estimator,
+                                   make_network)
 from repro.serving.router import RouteDecision, Router
 
-__all__ = ["Router", "RouteDecision"]
+__all__ = ["Router", "RouteDecision", "NetworkProcess",
+           "StationaryProcess", "MarkovProcess", "TraceReplayProcess",
+           "TInputEstimator", "make_network", "make_estimator"]

@@ -62,7 +62,7 @@ class ServingLoop:
     def __init__(self, engines: Dict[str, InferenceEngine],
                  profiles: Optional[List[ModelProfile]] = None,
                  t_threshold: float = 30.0, seed: int = 0,
-                 policy="cnnselect"):
+                 policy="cnnselect", t_estimator=None):
         self.engines = engines
         some = next(iter(engines.values()))
         self.batchers = {
@@ -73,8 +73,11 @@ class ServingLoop:
             # Single-engine loop: no selection, everything to one queue.
             self.router = None
         else:
+            # t_estimator: budget-side T_input source (DESIGN.md §9) —
+            # None trusts each request's observed upload time.
             self.router = Router(profiles, policy=policy,
-                                 t_threshold=t_threshold, seed=seed)
+                                 t_threshold=t_threshold, seed=seed,
+                                 t_estimator=t_estimator)
             for name in self.router.order:
                 self.router.attach_queue(name, self.batchers[name])
         self.metrics = LoopMetrics()

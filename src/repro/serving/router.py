@@ -22,6 +22,7 @@ from repro.core.profiles import ProfileStore
 from repro.core.selection import ModelProfile, Policy, make_policy
 from repro.core.zoo import ModelZoo
 from repro.serving.batching import FifoQueue
+from repro.serving.network import TInputEstimator, make_estimator
 
 
 @dataclass
@@ -44,10 +45,15 @@ class Router:
                  t_threshold: float = 50.0, stage2_variant: str = "figure",
                  seed: int = 0, chunk: int = 2048,
                  memory_budget_bytes: Optional[int] = None,
-                 min_sigma: float = 0.0):
+                 min_sigma: float = 0.0,
+                 t_estimator: Union[str, TInputEstimator, None] = None):
         self.policy = make_policy(policy, t_threshold=t_threshold,
                                   stage2_variant=stage2_variant, seed=seed,
                                   chunk=chunk)
+        # Optional online T_input estimator (DESIGN.md §9): when set,
+        # per-request budgets come from its causal estimate of recent
+        # upload times, not from the raw per-request observation.
+        self.t_estimator = make_estimator(t_estimator)
         self.store = ProfileStore()
         self.zoo = ModelZoo(memory_budget_bytes)
         self.order: List[str] = []
@@ -99,9 +105,20 @@ class Router:
 
     # -- admission --------------------------------------------------------
 
+    def observe_t_input(self, t_input: float) -> float:
+        """Feed one observed upload time to the attached estimator and
+        return the budget-side T_input for this request (the raw
+        observation when no estimator is attached)."""
+        if self.t_estimator is None:
+            return float(t_input)
+        est = self.t_estimator.estimate(observed=t_input)
+        self.t_estimator.observe(float(t_input))
+        return est
+
     def select(self, t_sla: float, t_input: float, *,
                realized: Optional[np.ndarray] = None) -> int:
-        """Pure policy decision for one request (no zoo side effects)."""
+        """Pure policy decision for one request (no zoo or estimator
+        side effects; `t_input` is taken as the budget-side value)."""
         return self.policy.select(self.current_profiles(), t_sla, t_input,
                                   realized=realized)
 
@@ -109,8 +126,10 @@ class Router:
               realized: Optional[np.ndarray] = None,
               rng: Optional[np.random.Generator] = None) -> RouteDecision:
         """Select a model and transition it hot, charging this request
-        the cold-start penalty if it wasn't."""
-        idx = self.select(t_sla, t_input, realized=realized)
+        the cold-start penalty if it wasn't. The observed `t_input`
+        passes through the estimator (if any) for budgeting."""
+        idx = self.select(t_sla, self.observe_t_input(t_input),
+                          realized=realized)
         name = self.order[idx]
         startup = self.zoo.ensure_hot(name, now, rng)
         return RouteDecision(idx, name, startup)
@@ -120,11 +139,15 @@ class Router:
                     detail: bool = False):
         """Vectorized admission over N requests: one `select_batch` call
         (chunked jit for cnnselect), no zoo side effects — callers
-        replay cold/warm transitions in event order via `zoo`."""
+        replay cold/warm transitions in event order via `zoo`. With an
+        estimator attached, the observed `t_input` trace is replaced by
+        its causal `estimate_series` for budgeting."""
+        t_input = np.asarray(t_input, np.float64)
+        if self.t_estimator is not None:
+            t_input = self.t_estimator.estimate_series(t_input)
         return self.policy.select_batch(
             self.current_profiles(), np.asarray(t_sla, np.float64),
-            np.asarray(t_input, np.float64), realized=realized,
-            detail=detail)
+            t_input, realized=realized, detail=detail)
 
     def submit(self, req, *, now: float = 0.0) -> RouteDecision:
         """Route one request and enqueue it on its model's queue."""

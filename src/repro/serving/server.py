@@ -56,13 +56,14 @@ class ServerMetrics:
 class CNNSelectServer:
     def __init__(self, models: List[ServedModel], *, t_threshold: float,
                  policy="cnnselect", seed: int = 0,
-                 n_tokens: int = 8, stage2_variant: str = "figure"):
+                 n_tokens: int = 8, stage2_variant: str = "figure",
+                 t_estimator=None):
         self.models = {m.name: m for m in models}
         self.order = [m.name for m in models]
         self.n_tokens = n_tokens
         self.router = Router(policy=policy, t_threshold=t_threshold,
                              stage2_variant=stage2_variant, seed=seed,
-                             min_sigma=0.5)
+                             min_sigma=0.5, t_estimator=t_estimator)
         for m in models:
             # mu=0: latency priors arrive online via profile_models().
             self.router.register(ModelProfile(
@@ -92,7 +93,10 @@ class CNNSelectServer:
         return self.router.current_profiles()
 
     def select(self, t_sla: float, t_input: float) -> str:
-        return self.order[self.router.select(t_sla, t_input)]
+        """Budget from the observed upload time via the router's
+        estimator (identity when none is attached), then select."""
+        return self.order[self.router.select(
+            t_sla, self.router.observe_t_input(t_input))]
 
     def handle(self, req: Request, t_sla: float) -> dict:
         """Serve one request batch-of-one style (the prototype evaluation

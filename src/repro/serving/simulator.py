@@ -1,8 +1,12 @@
 """Event-driven serving simulator (paper §5.2: 10,000-request simulations
 seeded with empirical CNN execution-time and network measurements).
 
-Each request: T_input sampled from the network model; the policy sees the
-observed upload time and the profile store; the selected model's
+Each request: T_input drawn from the network process (stationary,
+regime-switching Markov, or trace replay — whole-trace vectorized; see
+serving/network.py and DESIGN.md §9); the policy sees the budget-side
+upload time (the observation, or a `TInputEstimator`'s causal estimate
+when `SimConfig.t_estimator` is set) and the profile store; the selected
+model's
 execution time is sampled from its (mu, sigma); cold starts and queueing
 at a fixed-capacity server are modeled; SLA attainment and effective
 accuracy are recorded. Hedged requests (straggler mitigation) optionally
@@ -16,13 +20,15 @@ machine replays per request in event order."""
 
 from __future__ import annotations
 
+import copy
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core.selection import ModelProfile, Policy
-from repro.serving.network import NetworkModel
+from repro.serving.network import (NetworkProcess, TInputEstimator,
+                                   make_estimator, make_network)
 from repro.serving.router import Router
 
 
@@ -31,7 +37,10 @@ class SimConfig:
     t_sla: float
     t_threshold: float = 50.0
     n_requests: int = 10000
-    network: str = "campus_wifi"
+    # A NETWORKS name (stationary, paper behaviour), a NETWORK_SCENARIOS
+    # name (regime-switching Markov), "trace:<name>", or a prebuilt
+    # NetworkProcess.
+    network: Union[str, NetworkProcess] = "campus_wifi"
     # Any registry spec (cnnselect | greedy | greedy_nw | random | oracle
     # | static:<name>) or a prebuilt Policy object.
     policy: Union[str, Policy] = "cnnselect"
@@ -42,6 +51,10 @@ class SimConfig:
     hedge_at_p95: bool = False
     memory_budget_bytes: Optional[int] = None
     prewarm: bool = True
+    # Budget-side T_input source: None = the observed per-request upload
+    # time (paper behaviour); or "mean" | "ewma[:alpha]" | "pctl[:q]" |
+    # a TInputEstimator (online estimation under time-varying networks).
+    t_estimator: Union[str, TInputEstimator, None] = None
 
 
 @dataclass
@@ -56,30 +69,65 @@ class SimResult:
     violations: np.ndarray       # bool
     cold_starts: int
     hedges: int = 0
+    regimes: Optional[np.ndarray] = None       # (N,) network regime ids
+    regime_names: Optional[Sequence[str]] = None
+    accuracies: Optional[np.ndarray] = None    # (N,) selected A(m)
 
     def selection_histogram(self, names: Sequence[str]) -> Dict[str, float]:
         h = np.bincount(self.selections, minlength=len(names)) / len(
             self.selections)
         return {n: float(f) for n, f in zip(names, h)}
 
+    def per_regime(self) -> Dict[str, Dict[str, float]]:
+        """Attainment / accuracy / latency split by network regime
+        (time-varying processes; one bucket for stationary runs)."""
+        if self.regimes is None:
+            return {}
+        names = self.regime_names or [
+            f"regime{k}" for k in range(int(self.regimes.max()) + 1)]
+        out: Dict[str, Dict[str, float]] = {}
+        for k, name in enumerate(names):
+            mask = self.regimes == k
+            if not mask.any():
+                continue
+            out[name] = {
+                "share": float(mask.mean()),
+                "attainment": float(1.0 - self.violations[mask].mean()),
+                "mean_latency": float(self.latencies[mask].mean()),
+            }
+            if self.accuracies is not None:
+                out[name]["accuracy"] = float(self.accuracies[mask].mean())
+        return out
+
 
 def simulate(profiles: Sequence[ModelProfile], cfg: SimConfig) -> SimResult:
     rng = np.random.default_rng(cfg.seed)
-    net = NetworkModel.named(cfg.network)
+    net = make_network(cfg.network)
     # Decorrelate the policy's RNG stream from the trace rng above —
     # seeding both with cfg.seed would make e.g. the random baseline's
     # picks depend on the very draws that generated the workload.
     policy_seed = int(np.random.SeedSequence([cfg.seed, 1]).generate_state(1)[0])
+    # The estimator's cold-start prior is the process's long-run mean —
+    # exactly what a server trusting offline measurements would use. A
+    # prebuilt instance is copied: simulate() must not leak estimator
+    # state across runs (sla_sweep reuses one config's estimator).
+    est_spec = cfg.t_estimator
+    if isinstance(est_spec, TInputEstimator):
+        est_spec = copy.deepcopy(est_spec)
+        if est_spec.prior is None:      # instances get the same prior
+            est_spec.prior = net.mean   # a string spec would
+    estimator = make_estimator(est_spec, prior=net.mean)
     router = Router(profiles, policy=cfg.policy,
                     t_threshold=cfg.t_threshold,
                     stage2_variant=cfg.stage2_variant, seed=policy_seed,
-                    memory_budget_bytes=cfg.memory_budget_bytes)
+                    memory_budget_bytes=cfg.memory_budget_bytes,
+                    t_estimator=estimator)
     zoo = router.zoo
     if cfg.prewarm:
         router.prewarm()
 
     N = cfg.n_requests
-    t_inputs = net.sample_t_input(rng, N)
+    t_inputs, regimes = net.sample_trace(rng, N)
     # Pre-sample each model's hypothetical execution time per request so
     # the oracle and the actual run see consistent draws.
     exec_samples = np.stack(
@@ -141,6 +189,9 @@ def simulate(profiles: Sequence[ModelProfile], cfg: SimConfig) -> SimResult:
         violations=viol,
         cold_starts=zoo.total_cold_starts,
         hedges=hedges,
+        regimes=regimes,
+        regime_names=net.regime_names(),
+        accuracies=acc,
     )
 
 

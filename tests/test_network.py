@@ -1,0 +1,275 @@
+"""NetworkProcess hierarchy + TInputEstimator unit/boundary tests
+(plain — the hypothesis-driven property tests live in
+test_properties.py). Covers the unified positivity clamp, seeded
+determinism, legacy bit-for-bit compatibility, Markov regime behaviour,
+trace replay, estimator cold start / tracking lag, and the
+resize_decision boundary cases."""
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_zoo import (NETWORK_SCENARIOS, NETWORKS,
+                                     sample_network, synthetic_trace)
+from repro.serving.network import (MIN_T_INPUT_MS, EWMAEstimator,
+                                   MarkovProcess, MeanEstimator,
+                                   NetworkModel, ObservedEstimator,
+                                   PercentileEstimator, StationaryProcess,
+                                   TraceReplayProcess, make_estimator,
+                                   make_network, resize_decision)
+
+ALL_SPECS = (list(NETWORKS) + list(NETWORK_SCENARIOS)
+             + ["trace:wifi_lte_step", "trace:diurnal"])
+
+
+# -- processes --------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", ALL_SPECS)
+def test_seeded_determinism_and_positivity(spec):
+    proc = make_network(spec)
+    a, ra = proc.sample_trace(np.random.default_rng(7), 2000)
+    b, rb = proc.sample_trace(np.random.default_rng(7), 2000)
+    assert np.array_equal(a, b) and np.array_equal(ra, rb)
+    assert (a >= MIN_T_INPUT_MS).all()
+    assert len(proc.regime_names()) >= ra.max() + 1
+
+
+def test_clamp_applies_to_every_process():
+    """The 1.0 ms floor is unified in the base class — pre-refactor only
+    the legacy fallback path clamped."""
+    rng = np.random.default_rng(0)
+    # A normal with mean << 0 would emit negative times unclamped.
+    t = StationaryProcess("x", 0.5, 5.0, dist="normal").sample_t_input(
+        rng, 5000)
+    assert (t >= MIN_T_INPUT_MS).all() and (t == MIN_T_INPUT_MS).any()
+    # Legacy ad-hoc NetworkModel keeps the same clamped-normal path.
+    t = NetworkModel("custom", 0.5, 5.0).sample_t_input(rng, 5000)
+    assert (t >= MIN_T_INPUT_MS).all()
+    # Markov states with sub-ms means clamp too.
+    mk = MarkovProcess([("a", 0.01, 0.5), ("b", 0.02, 0.5)],
+                       [[0.5, 0.5], [0.5, 0.5]])
+    assert (mk.sample_t_input(rng, 2000) >= MIN_T_INPUT_MS).all()
+
+
+def test_stationary_matches_legacy_networkmodel_bit_for_bit():
+    for name in NETWORKS:
+        legacy = sample_network(name, np.random.default_rng(11), 512)
+        proc = StationaryProcess.named(name).sample_t_input(
+            np.random.default_rng(11), 512)
+        shim = NetworkModel.named(name).sample_t_input(
+            np.random.default_rng(11), 512)
+        assert np.array_equal(legacy, proc), name
+        assert np.array_equal(legacy, shim), name
+
+
+def test_nonpositive_lognormal_mean_rejected():
+    """log(mean <= 0) would emit NaN draws the clamp can't catch."""
+    with pytest.raises(ValueError):
+        StationaryProcess("x", 0.0, 5.0)
+    with pytest.raises(ValueError):
+        StationaryProcess("x", -5.0, 5.0)
+    with pytest.raises(ValueError):
+        StationaryProcess("x", 5.0, -1.0)
+    with pytest.raises(ValueError):
+        MarkovProcess([("a", -5.0, 5.0), ("b", 10.0, 5.0)],
+                      [[0.5, 0.5], [0.5, 0.5]])
+    # A normal-dist model may have any mean — the clamp handles it.
+    assert (StationaryProcess("x", -5.0, 5.0, dist="normal")
+            .sample_t_input(np.random.default_rng(0), 100)
+            >= MIN_T_INPUT_MS).all()
+
+
+def test_markov_validation():
+    with pytest.raises(ValueError):
+        MarkovProcess(["campus_wifi"], [[0.5, 0.5]])      # shape mismatch
+    with pytest.raises(ValueError):
+        MarkovProcess(["campus_wifi", "lte"],
+                      [[0.9, 0.2], [0.5, 0.5]])           # rows != 1
+    with pytest.raises(ValueError):
+        MarkovProcess(["campus_wifi", "no_such_state"],
+                      [[0.5, 0.5], [0.5, 0.5]])
+    with pytest.raises(ValueError):
+        MarkovProcess(["campus_wifi", "lte"],
+                      [[0.5, 0.5], [0.5, 0.5]], start=2)
+
+
+def test_markov_occupancy_converges_to_stationary():
+    # Fast-mixing asymmetric chain: occupancy over a long trace matches
+    # the analytic stationary distribution.
+    mk = MarkovProcess(["campus_wifi", "lte"],
+                       [[0.8, 0.2], [0.4, 0.6]], name="mix")
+    pi = mk.stationary_distribution()
+    np.testing.assert_allclose(pi, [2 / 3, 1 / 3], atol=1e-9)
+    _, reg = mk.sample_trace(np.random.default_rng(5), 60000)
+    occ = np.bincount(reg, minlength=2) / len(reg)
+    np.testing.assert_allclose(occ, pi, atol=0.02)
+    assert mk.mean == pytest.approx(
+        pi @ [NETWORKS["campus_wifi"]["mean"], NETWORKS["lte"]["mean"]])
+
+
+def test_markov_regime_means_track_states():
+    mk = MarkovProcess.from_scenario("wifi_lte_handoff")
+    t, reg = mk.sample_trace(np.random.default_rng(1), 30000)
+    wifi, lte = t[reg == 0], t[reg == 1]
+    assert len(wifi) and len(lte)
+    assert abs(wifi.mean() - NETWORKS["campus_wifi"]["mean"]) < 6.0
+    assert abs(lte.mean() - NETWORKS["lte"]["mean"]) < 12.0
+
+
+def test_trace_replay_cycles_and_jitter():
+    tr = TraceReplayProcess([10.0, 20.0, 30.0], jitter_cv=0.0)
+    t, reg = tr.sample_trace(np.random.default_rng(0), 7)
+    np.testing.assert_allclose(t, [10, 20, 30, 10, 20, 30, 10])
+    assert tr.mean == pytest.approx(20.0)
+    jit = TraceReplayProcess([50.0] * 4, jitter_cv=0.2)
+    t, _ = jit.sample_trace(np.random.default_rng(0), 8000)
+    assert abs(t.mean() - 50.0) < 2.0 and t.std() > 5.0
+    with pytest.raises(ValueError):
+        TraceReplayProcess([])
+    with pytest.raises(ValueError):
+        TraceReplayProcess([10.0, -1.0])
+
+
+def test_trace_replay_default_names_cover_labels():
+    tr = TraceReplayProcess([10.0, 10.0, 100.0, 100.0], jitter_cv=0.0,
+                            name="step", regime_labels=[0, 0, 1, 1])
+    assert tr.regime_names() == ["step:0", "step:1"]
+    named = TraceReplayProcess([10.0, 100.0], regime_labels=[0, 1],
+                               regime_names=["lo", "hi"])
+    assert named.regime_names() == ["lo", "hi"]
+    with pytest.raises(ValueError):
+        TraceReplayProcess([10.0, 100.0], regime_labels=[0, 1],
+                           regime_names=["only_one"])
+
+
+def test_synthetic_traces():
+    step = synthetic_trace("wifi_lte_step", 100)
+    assert step[0] == NETWORKS["campus_wifi"]["mean"]
+    assert step[-1] == NETWORKS["lte"]["mean"]
+    diurnal = synthetic_trace("diurnal", 256)
+    assert diurnal.min() >= NETWORKS["campus_wifi"]["mean"] - 1e-9
+    assert diurnal.max() <= NETWORKS["cellular_hotspot"]["mean"] + 1e-9
+    with pytest.raises(ValueError):
+        synthetic_trace("no_such_trace")
+
+
+def test_make_network_resolution():
+    assert isinstance(make_network("campus_wifi"), StationaryProcess)
+    assert isinstance(make_network("wifi_lte_handoff"), MarkovProcess)
+    assert isinstance(make_network("trace:diurnal"), TraceReplayProcess)
+    proc = StationaryProcess("x", 10.0, 1.0)
+    assert make_network(proc) is proc
+    with pytest.raises(ValueError):
+        make_network("no_such_network")
+    with pytest.raises(ValueError):
+        make_network(("campus_wifi",))      # non-str, non-process spec
+
+
+# -- estimators -------------------------------------------------------------
+
+def test_estimator_registry():
+    assert isinstance(make_estimator("observed"), ObservedEstimator)
+    assert isinstance(make_estimator("mean", prior=3.0), MeanEstimator)
+    e = make_estimator("ewma:0.5")
+    assert isinstance(e, EWMAEstimator) and e.alpha == 0.5
+    p = make_estimator("pctl:75")
+    assert isinstance(p, PercentileEstimator) and p.q == 75.0
+    assert make_estimator(None) is None
+    inst = EWMAEstimator()
+    assert make_estimator(inst) is inst
+    with pytest.raises(ValueError):
+        make_estimator("kalman")
+    with pytest.raises(ValueError):
+        make_estimator("ewma:1.5")
+
+
+def test_mean_estimator_without_prior_fails_fast():
+    """A prior-less 'mean' spec can never answer — it must raise, not
+    silently degrade to the (adaptive) observed behaviour."""
+    with pytest.raises(ValueError):
+        make_estimator("mean")
+    with pytest.raises(ValueError):
+        MeanEstimator().estimate(observed=5.0)
+    with pytest.raises(ValueError):
+        MeanEstimator().estimate_series(np.ones(3))
+
+
+def test_estimator_cold_start():
+    # Prior wins when cold; the observation is the last resort.
+    assert EWMAEstimator(prior=40.0).estimate() == 40.0
+    assert EWMAEstimator().estimate(observed=55.0) == 55.0
+    with pytest.raises(ValueError):
+        EWMAEstimator().estimate()
+    assert PercentileEstimator(prior=40.0).estimate() == 40.0
+    assert MeanEstimator(prior=63.0).estimate(observed=999.0) == 63.0
+    assert ObservedEstimator(prior=63.0).estimate(observed=999.0) == 999.0
+    assert ObservedEstimator(prior=63.0).estimate() == 63.0
+    # After one observation the state takes over from the prior.
+    e = EWMAEstimator(alpha=0.5, prior=40.0)
+    e.observe(100.0)
+    assert e.estimate() == 100.0
+    e.observe(50.0)
+    assert e.estimate() == pytest.approx(75.0)
+
+
+def test_ewma_tracks_step_change_with_lag():
+    e = EWMAEstimator(alpha=0.2, prior=63.0)
+    xs = np.array([63.0] * 100 + [126.0] * 100)
+    series = e.estimate_series(xs)
+    # Causal: the estimate at the step index still reflects the old
+    # regime, then converges geometrically (1-alpha)^k toward the new.
+    assert series[100] == pytest.approx(63.0, abs=1e-6)
+    lag = np.argmax(series[100:] > 0.95 * 126.0)
+    expected = np.log(0.05 * 126.0 / 63.0) / np.log(0.8)
+    assert 0 < lag <= expected + 2
+    assert series[-1] == pytest.approx(126.0, rel=0.01)
+
+
+def test_estimator_series_matches_scalar_protocol():
+    xs = np.random.default_rng(3).lognormal(4.0, 0.3, 300)
+    for spec in ("observed", "mean", "ewma:0.05", "ewma:0.3", "ewma:0.9",
+                 "ewma:1.0", "pctl:85"):
+        fast = make_estimator(spec, prior=60.0).estimate_series(xs)
+        slow_est = make_estimator(spec, prior=60.0)
+        slow = np.empty_like(xs)
+        for i, x in enumerate(xs):
+            slow[i] = slow_est.estimate(observed=float(x))
+            slow_est.observe(float(x))
+        np.testing.assert_allclose(fast, slow, rtol=1e-9,
+                                   err_msg=spec)
+
+
+def test_percentile_estimator_window():
+    p = PercentileEstimator(q=100.0, window=3)
+    for v in (10.0, 50.0, 20.0, 30.0, 5.0):
+        p.observe(v)
+    # Window keeps the last 3 observations only: max is 30, not 50.
+    assert p.estimate() == 30.0
+
+
+# -- resize_decision boundaries (paper §3.1) --------------------------------
+
+def test_resize_noop_at_or_below_target():
+    assert not resize_decision(110.0)
+    assert not resize_decision(50.0)
+    assert not resize_decision(0.0)
+
+
+def test_resize_break_even_size():
+    # resize wins iff scale*x + up*110 <= up*x, i.e.
+    # x >= up*110 / (up - scale) = 0.214*110/0.049 ~ 480.4 KB.
+    break_even = 0.214 * 110.0 / (0.214 - 0.165)
+    assert not resize_decision(break_even - 1.0)
+    assert resize_decision(break_even + 1.0)
+    # The boundary is inclusive up to float rounding.
+    assert resize_decision(break_even + 1e-9)
+
+
+def test_resize_custom_cost_coefficients():
+    # Free resize: always worth it above the target size.
+    assert resize_decision(111.0, scale_ms_per_kb=0.0)
+    # Resize slower than the upload saving: never worth it.
+    assert not resize_decision(5000.0, scale_ms_per_kb=1.0,
+                               upload_ms_per_kb=0.2)
+    # Equal-cost knife edge at the <= boundary.
+    assert resize_decision(220.0, scale_ms_per_kb=0.107,
+                           upload_ms_per_kb=0.214)

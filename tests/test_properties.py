@@ -1,7 +1,9 @@
 """Hypothesis property tests (selection invariants, Welford vs numpy,
-error-feedback quantization). Split out of the per-module test files so
-the tier-1 suite collects cleanly without the optional `hypothesis`
-dependency (install via the `test` extra)."""
+error-feedback quantization, NetworkProcess/TInputEstimator
+invariants). Split out of the per-module test files so the tier-1
+suite collects cleanly without the optional `hypothesis` dependency
+(install via the `test` extra); the plain (example-based) NetworkProcess
+tests live in test_network.py."""
 
 import numpy as np
 import pytest
@@ -9,8 +11,11 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro.configs.paper_zoo import NETWORKS, sample_network
 from repro.core.profiles import OnlineProfile
 from repro.core.selection import ModelProfile, cnnselect
+from repro.serving.network import (MIN_T_INPUT_MS, EWMAEstimator,
+                                   MarkovProcess, StationaryProcess)
 
 
 def mk_profiles(mus, sigmas, accs):
@@ -67,6 +72,82 @@ def test_welford_matches_numpy(xs):
     np.testing.assert_allclose(p.mean, np.mean(xs), rtol=1e-6, atol=1e-6)
     np.testing.assert_allclose(p.std, np.std(xs, ddof=1), rtol=1e-5,
                                atol=1e-5)
+
+
+# -- NetworkProcess invariants (plain variants in test_network.py) ---------
+
+@settings(max_examples=100, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    mean=st.floats(0.5, 400.0),
+    std=st.floats(0.01, 200.0),
+    n=st.integers(1, 500),
+    dist=st.sampled_from(["lognormal", "normal"]),
+)
+def test_network_process_positive_and_deterministic(seed, mean, std, n,
+                                                    dist):
+    proc = StationaryProcess("x", mean, std, dist=dist)
+    a = proc.sample_t_input(np.random.default_rng(seed), n)
+    b = proc.sample_t_input(np.random.default_rng(seed), n)
+    assert np.array_equal(a, b)                 # seeded determinism
+    assert (a >= MIN_T_INPUT_MS).all()          # unified clamp
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    name=st.sampled_from(sorted(NETWORKS)),
+    n=st.integers(1, 300),
+)
+def test_stationary_matches_legacy_draws_bit_for_bit(seed, name, n):
+    """StationaryProcess consumes the identical RNG stream as the
+    pre-refactor `sample_network`; the only difference is the clamp."""
+    legacy = sample_network(name, np.random.default_rng(seed), n)
+    proc = StationaryProcess.named(name).sample_t_input(
+        np.random.default_rng(seed), n)
+    assert np.array_equal(np.maximum(legacy, MIN_T_INPUT_MS), proc)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    p01=st.floats(0.05, 0.5),
+    p10=st.floats(0.05, 0.5),
+)
+def test_markov_occupancy_converges_to_stationary(seed, p01, p10):
+    mk = MarkovProcess([("a", 50.0, 10.0), ("b", 100.0, 20.0)],
+                       [[1.0 - p01, p01], [p10, 1.0 - p10]])
+    pi = mk.stationary_distribution()
+    np.testing.assert_allclose(
+        pi, [p10 / (p01 + p10), p01 / (p01 + p10)], atol=1e-8)
+    _, reg = mk.sample_trace(np.random.default_rng(seed), 40000)
+    occ = np.bincount(reg, minlength=2) / 40000.0
+    # Worst-case occupancy std here is ~0.011 (rho = 1-p01-p10 = 0.9);
+    # 0.05 is a >4-sigma bound.
+    np.testing.assert_allclose(occ, pi, atol=0.05)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    xs=st.lists(st.floats(1.0, 1e4), min_size=2, max_size=100),
+    alpha=st.floats(0.01, 1.0),
+    prior=st.floats(1.0, 1e4),
+)
+def test_ewma_series_causal_and_bounded(xs, alpha, prior):
+    xs = np.asarray(xs)
+    s = EWMAEstimator(alpha=alpha, prior=prior).estimate_series(xs)
+    # Cold start answers the prior; every estimate is a convex
+    # combination of the prior and past observations.
+    assert s[0] == prior
+    lo, hi = min(prior, xs.min()), max(prior, xs.max())
+    tol = 1e-6 * max(1.0, hi)        # blocked closed-form round-off
+    assert ((s >= lo - tol) & (s <= hi + tol)).all()
+    # Causality: changing the last observation cannot move any earlier
+    # estimate (identical float ops -> bitwise equality).
+    mutated = xs.copy()
+    mutated[-1] = 12345.0
+    s2 = EWMAEstimator(alpha=alpha, prior=prior).estimate_series(mutated)
+    assert np.array_equal(s[:-1], s2[:-1])
 
 
 # -- int8 error feedback (from test_quant.py) ------------------------------

@@ -106,6 +106,32 @@ def test_hedging_reduces_tail():
     assert hedged.p95_latency <= base.p95_latency + 1e-6
 
 
+def test_estimator_recovers_attainment_under_regime_shift():
+    """Time-varying acceptance bar (ISSUE 2): under the wifi->lte Markov
+    handoff, cnnselect budgeting from the EWMA estimator attains at
+    least the stationary-mean-budget variant, and beats greedy."""
+    profs = paper_profiles()
+    kw = dict(t_sla=320.0, n_requests=2500, network="wifi_lte_handoff")
+    ewma = simulate(profs, SimConfig(**kw, t_estimator="ewma:0.2", seed=3))
+    mean = simulate(profs, SimConfig(**kw, t_estimator="mean", seed=3))
+    greedy = simulate(profs, SimConfig(**kw, policy="greedy", seed=3))
+    assert ewma.attainment >= mean.attainment
+    assert ewma.attainment > greedy.attainment
+    # Per-regime reporting labels both states and covers the trace.
+    per = ewma.per_regime()
+    assert set(per) == {"campus_wifi", "lte"}
+    assert sum(v["share"] for v in per.values()) == pytest.approx(1.0)
+
+
+def test_trace_replay_network_in_simulator():
+    profs = paper_profiles()
+    r = simulate(profs, SimConfig(t_sla=320.0, n_requests=1000,
+                                  network="trace:wifi_lte_step",
+                                  t_estimator="ewma:0.2", seed=0))
+    assert 0.0 < r.attainment <= 1.0
+    assert r.regimes is not None and len(r.regimes) == 1000
+
+
 def test_network_models_ordering(rng):
     wifi = NetworkModel.named("campus_wifi").sample_t_input(rng, 4000)
     hot = NetworkModel.named("cellular_hotspot").sample_t_input(rng, 4000)
