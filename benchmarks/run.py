@@ -20,6 +20,7 @@ MODULES = [
     ("fig9_server_capacity", "benchmarks.server_capacity"),
     ("fig10_network_conditions", "benchmarks.network_conditions"),
     ("fig10x_network_dynamics", "benchmarks.network_dynamics"),
+    ("table4x_fleet_dynamics", "benchmarks.fleet_dynamics"),
     ("fig12_prototype_e2e", "benchmarks.prototype_e2e"),
     ("fig13_selection_vs_greedy", "benchmarks.selection_vs_greedy"),
     ("kernels", "benchmarks.kernels_bench"),

@@ -13,13 +13,13 @@ import numpy as np
 
 from repro.configs.paper_zoo import paper_profiles
 from repro.core.selection import cnnselect, greedy_select
-from repro.serving.network import NetworkModel
+from repro.serving.network import make_network
 
 
 def main():
     profs = paper_profiles()
     rng = np.random.default_rng(0)
-    net = NetworkModel.named("campus_wifi")
+    net = make_network("campus_wifi")
     print(f"{'SLA(ms)':>8} | {'base model':>20} | {'picked (100 reqs)':48s} | greedy")
     for sla in (80, 115, 150, 200, 300, 500, 1000, 3000):
         counts = {}

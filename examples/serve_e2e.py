@@ -24,7 +24,7 @@ from repro.data import CopyTask
 from repro.models import init_params
 from repro.serving.batching import Request
 from repro.serving.engine import InferenceEngine
-from repro.serving.network import NetworkModel
+from repro.serving.network import make_network
 from repro.serving.server import CNNSelectServer, ServedModel
 from repro.training.optim import adamw, constant_schedule
 from repro.training.step import make_train_step, init_train_state
@@ -78,7 +78,7 @@ def main():
         print(f"profile {p.name}: mu={p.mu:.1f}ms sigma={p.sigma:.1f}ms "
               f"accuracy={p.accuracy:.2%}")
 
-    net = NetworkModel.named("campus_wifi")
+    net = make_network("campus_wifi")
     rng = np.random.default_rng(0)
     mus = {p.name: p.mu for p in srv.current_profiles()}
     slas = [mus["tiny"] * 1.5 + 130, (mus["tiny"] + mus["small"]) / 2 + 160,

@@ -118,6 +118,40 @@ DEVICES = {
     "nexus5_caffe": {"alexnet_equiv": 8910.0},
 }
 
+# Device tiers for `serving.fleet`: each tier pairs a radio (any
+# make_network spec) with the on-device profile the paper measured for
+# that class of phone — (DEVICES key, model) resolved against DEVICES
+# for the mean and TABLE5 for the accuracy. `on_device=None` models a
+# device that cannot run the CNN locally (the paper's Nexus 5 at ~9 s
+# is never SLA-viable, so "legacy" simply has no fallback).
+DEVICE_TIERS = {
+    "flagship": dict(network="campus_wifi",
+                     on_device=("pixel2", "mobilenetv1_10")),
+    "midrange": dict(network="lte",
+                     on_device=("pixel2", "mobilenetv1_025")),
+    "budget": dict(network="cellular_hotspot",
+                   on_device=("motox", "mobilenetv1_025")),
+    "legacy": dict(network="cellular_hotspot", on_device=None),
+}
+
+# Named fleets for `serving.fleet.make_fleet`: tuples of tier entries
+# (tier, weight, optional per-entry `network` override / `device_id`).
+# `lte_outage_fleet` puts the midrange tier on the `lte_outages`
+# regime-switching scenario — the degraded-regime tier the outage-aware
+# hedging/fallback benchmark reports on.
+FLEET_SCENARIOS = {
+    "mixed_fleet": (
+        dict(tier="flagship", weight=0.3),
+        dict(tier="midrange", weight=0.5),
+        dict(tier="budget", weight=0.2),
+    ),
+    "lte_outage_fleet": (
+        dict(tier="flagship", weight=0.4),
+        dict(tier="midrange", weight=0.4, network="lte_outages"),
+        dict(tier="legacy", weight=0.2),
+    ),
+}
+
 
 def paper_profiles(subset=None):
     """ModelProfile list from Table 5 (top-1 accuracy as A(m))."""

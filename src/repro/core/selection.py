@@ -50,6 +50,23 @@ def network_budget(t_sla, t_input, factor: float = T_NW_FACTOR):
     return t_sla - factor * t_input
 
 
+def on_device_fallback_decision(t_sla, t_input_est, fastest_mu,
+                                on_device_ms, factor: float = T_NW_FACTOR):
+    """MDInference's (arXiv:2002.06603) on-device-vs-cloud duality,
+    evaluated with the *device's* estimated budget: serve locally iff
+    the device can meet the SLA on its own while the estimated cloud
+    path cannot even with the fastest model in the zoo —
+
+        ``on_device_ms <= T_sla < factor * t_input_est + fastest_mu``.
+
+    ``on_device_ms == 0`` means the device has no on-device capability
+    and never falls back (paper §4: a Nexus 5 at ~9 s is never viable).
+    Vectorized over per-request arrays of estimates / device profiles."""
+    od = np.asarray(on_device_ms, np.float64)
+    cloud_est = factor * np.asarray(t_input_est, np.float64) + fastest_mu
+    return (od > 0.0) & (od <= t_sla) & (cloud_est > t_sla)
+
+
 @dataclass(frozen=True)
 class ModelProfile:
     name: str

@@ -229,6 +229,8 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
     ma = compiled.memory_analysis()
     print("  memory_analysis:", ma, flush=True)
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # older jax: list of one dict
+        ca = ca[0] if ca else {}
     print("  cost_analysis: flops=%.3e bytes=%.3e" % (
         ca.get("flops", 0.0), ca.get("bytes accessed", 0.0)), flush=True)
     hlo = analyze(compiled.as_text())

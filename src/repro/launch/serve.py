@@ -19,7 +19,7 @@ from repro.core.selection import make_policy, policy_names
 from repro.models import init_params
 from repro.serving.batching import Request
 from repro.serving.engine import InferenceEngine
-from repro.serving.network import NetworkModel
+from repro.serving.network import make_network
 from repro.serving.server import CNNSelectServer, ServedModel
 
 
@@ -66,7 +66,7 @@ def main():
         print(f"  {p.name}: mu={p.mu:.1f}ms sigma={p.sigma:.1f} "
               f"acc={p.accuracy:.2f}")
 
-    net = NetworkModel.named(args.network)
+    net = make_network(args.network)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         req = Request(arrival=0.0, rid=i,

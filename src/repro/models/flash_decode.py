@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models.config import ModelConfig
+from repro.utils import shard_map
 
 
 def flash_decode_sharded(q, k_new, v_new, ck, cv, cpos, cache_pos,
@@ -87,7 +88,7 @@ def flash_decode_sharded(q, k_new, v_new, ck, cv, cpos, cache_pos,
         out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(qb.dtype)
         return out.reshape(Bq, 1, H, hd), ckb, cvb, posb
 
-    fn = jax.shard_map(
+    fn = shard_map(
         device_fn,
         mesh=parallel.mesh,
         in_specs=(bspec4, bspec4, bspec4, cspec, cspec, P(tp), P()),

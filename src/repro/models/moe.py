@@ -33,6 +33,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.models.config import ModelConfig
 from repro.models.layers import act_fn
+from repro.utils import shard_map
 
 
 def router_topk(p, x2d, cfg: ModelConfig):
@@ -190,7 +191,7 @@ def moe_ffn_sharded(p, x, cfg: ModelConfig, parallel):
         aux = jax.lax.pmean(aux, data_axes)
         return out, aux
 
-    fn = jax.shard_map(
+    fn = shard_map(
         device_fn,
         mesh=parallel.mesh,
         in_specs=(rspec, wspec_in, wspec_in, wspec_out, bspec),

@@ -8,6 +8,8 @@ owns the profile store, cold/warm zoo state, and per-model queues, and
 resolves its selection policy by name from the `core.selection`
 registry. See DESIGN.md §2–3."""
 
+from repro.serving.fleet import (DeviceProfile, EstimatorBank,
+                                 FleetMixture, make_fleet)
 from repro.serving.network import (MarkovProcess, NetworkProcess,
                                    StationaryProcess, TInputEstimator,
                                    TraceReplayProcess, make_estimator,
@@ -16,4 +18,5 @@ from repro.serving.router import RouteDecision, Router
 
 __all__ = ["Router", "RouteDecision", "NetworkProcess",
            "StationaryProcess", "MarkovProcess", "TraceReplayProcess",
-           "TInputEstimator", "make_network", "make_estimator"]
+           "TInputEstimator", "make_network", "make_estimator",
+           "DeviceProfile", "FleetMixture", "EstimatorBank", "make_fleet"]

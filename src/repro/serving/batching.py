@@ -24,6 +24,9 @@ class Request:
     max_new_tokens: int = field(compare=False, default=16)
     sla_ms: float = field(compare=False, default=0.0)
     t_input_ms: float = field(compare=False, default=0.0)
+    # Issuing device (fleet serving, DESIGN.md §10): keys the Router's
+    # per-device EstimatorBank; None = single shared estimator.
+    device_id: Optional[str] = field(compare=False, default=None)
     # outputs
     tokens: list = field(compare=False, default_factory=list)
     start_exec: float = field(compare=False, default=0.0)

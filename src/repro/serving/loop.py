@@ -32,6 +32,7 @@ class LoopMetrics:
         self.records.append({
             "rid": req.rid, "model": model, "queue_ms": queue_ms,
             "exec_ms": exec_ms, "e2e_ms": e2e,
+            "device": req.device_id,
             "ok": (e2e <= req.sla_ms) if req.sla_ms else True,
         })
 
@@ -48,6 +49,19 @@ class LoopMetrics:
             "mean_e2e_ms": float(e.mean()),
             "p95_e2e_ms": float(np.percentile(e, 95)),
         }
+
+    def per_device(self) -> Dict[str, dict]:
+        """Attainment / queue split by issuing device (fleet traces)."""
+        out: Dict[str, dict] = {}
+        for dev in sorted({r["device"] or "<none>" for r in self.records}):
+            rs = [r for r in self.records
+                  if (r["device"] or "<none>") == dev]
+            out[dev] = {
+                "served": len(rs),
+                "attainment": float(np.mean([r["ok"] for r in rs])),
+                "mean_e2e_ms": float(np.mean([r["e2e_ms"] for r in rs])),
+            }
+        return out
 
 
 class ServingLoop:
@@ -74,7 +88,9 @@ class ServingLoop:
             self.router = None
         else:
             # t_estimator: budget-side T_input source (DESIGN.md §9) —
-            # None trusts each request's observed upload time.
+            # None trusts each request's observed upload time; an
+            # EstimatorBank keys estimation on each request's
+            # `device_id` (fleet traces, DESIGN.md §10).
             self.router = Router(profiles, policy=policy,
                                  t_threshold=t_threshold, seed=seed,
                                  t_estimator=t_estimator)

@@ -285,9 +285,17 @@ class NetworkModel(StationaryProcess):
         return cls(name, d["mean"], d["std"])
 
     def estimate_t_input(self, observed: float | None = None) -> float:
-        """Server-side estimate used for budgeting: the paper measures
-        the actual upload time of the arriving request (observed); fall
-        back to the distribution mean."""
+        """Deprecated pre-estimator shim: budget from the observed
+        upload time, falling back to the distribution mean. The
+        estimator API subsumes it — ``make_estimator("observed")`` for
+        the observation path, ``make_estimator("mean", prior=...)`` for
+        the mean fallback."""
+        import warnings
+        warnings.warn(
+            "NetworkModel.estimate_t_input is deprecated; use "
+            "make_estimator('observed') / make_estimator('mean', "
+            "prior=net.mean) and the Router's t_estimator instead",
+            DeprecationWarning, stacklevel=2)
         return observed if observed is not None else self.mean_ms
 
 

@@ -22,6 +22,7 @@ from repro.core.profiles import ProfileStore
 from repro.core.selection import ModelProfile, Policy, make_policy
 from repro.core.zoo import ModelZoo
 from repro.serving.batching import FifoQueue
+from repro.serving.fleet import EstimatorBank
 from repro.serving.network import TInputEstimator, make_estimator
 
 
@@ -46,14 +47,19 @@ class Router:
                  seed: int = 0, chunk: int = 2048,
                  memory_budget_bytes: Optional[int] = None,
                  min_sigma: float = 0.0,
-                 t_estimator: Union[str, TInputEstimator, None] = None):
+                 t_estimator: Union[str, TInputEstimator, EstimatorBank,
+                                    None] = None):
         self.policy = make_policy(policy, t_threshold=t_threshold,
                                   stage2_variant=stage2_variant, seed=seed,
                                   chunk=chunk)
         # Optional online T_input estimator (DESIGN.md §9): when set,
         # per-request budgets come from its causal estimate of recent
-        # upload times, not from the raw per-request observation.
-        self.t_estimator = make_estimator(t_estimator)
+        # upload times, not from the raw per-request observation. An
+        # `EstimatorBank` keys estimation per device (DESIGN.md §10) —
+        # pass each request's `device_id` through route/route_batch.
+        self.t_estimator = (t_estimator if isinstance(t_estimator,
+                                                      EstimatorBank)
+                            else make_estimator(t_estimator))
         self.store = ProfileStore()
         self.zoo = ModelZoo(memory_budget_bytes)
         self.order: List[str] = []
@@ -105,15 +111,32 @@ class Router:
 
     # -- admission --------------------------------------------------------
 
-    def observe_t_input(self, t_input: float) -> float:
+    def observe_t_input(self, t_input: float,
+                        device_id: Optional[str] = None) -> float:
         """Feed one observed upload time to the attached estimator and
         return the budget-side T_input for this request (the raw
-        observation when no estimator is attached)."""
+        observation when no estimator is attached). With an
+        `EstimatorBank`, `device_id` selects the device's estimator."""
         if self.t_estimator is None:
             return float(t_input)
+        if isinstance(self.t_estimator, EstimatorBank):
+            est = self.t_estimator.estimate(device_id, observed=t_input)
+            self.t_estimator.observe(device_id, float(t_input))
+            return est
         est = self.t_estimator.estimate(observed=t_input)
         self.t_estimator.observe(float(t_input))
         return est
+
+    def estimate_series(self, t_input, *, device_ids=None) -> np.ndarray:
+        """Causal budget-side estimates for a whole observed trace
+        (identity when no estimator is attached). Mutates estimator
+        state — each observation is fed exactly once."""
+        t_input = np.asarray(t_input, np.float64)
+        if self.t_estimator is None:
+            return t_input
+        if isinstance(self.t_estimator, EstimatorBank):
+            return self.t_estimator.estimate_series(t_input, device_ids)
+        return self.t_estimator.estimate_series(t_input)
 
     def select(self, t_sla: float, t_input: float, *,
                realized: Optional[np.ndarray] = None) -> int:
@@ -124,11 +147,14 @@ class Router:
 
     def route(self, t_sla: float, t_input: float, *, now: float = 0.0,
               realized: Optional[np.ndarray] = None,
-              rng: Optional[np.random.Generator] = None) -> RouteDecision:
+              rng: Optional[np.random.Generator] = None,
+              device_id: Optional[str] = None) -> RouteDecision:
         """Select a model and transition it hot, charging this request
         the cold-start penalty if it wasn't. The observed `t_input`
-        passes through the estimator (if any) for budgeting."""
-        idx = self.select(t_sla, self.observe_t_input(t_input),
+        passes through the estimator (if any) for budgeting; with an
+        `EstimatorBank`, keyed by the request's `device_id`."""
+        idx = self.select(t_sla,
+                          self.observe_t_input(t_input, device_id),
                           realized=realized)
         name = self.order[idx]
         startup = self.zoo.ensure_hot(name, now, rng)
@@ -136,22 +162,29 @@ class Router:
 
     def route_batch(self, t_sla, t_input, *,
                     realized: Optional[np.ndarray] = None,
-                    detail: bool = False):
+                    detail: bool = False, device_ids=None,
+                    estimated: bool = False):
         """Vectorized admission over N requests: one `select_batch` call
         (chunked jit for cnnselect), no zoo side effects — callers
         replay cold/warm transitions in event order via `zoo`. With an
         estimator attached, the observed `t_input` trace is replaced by
-        its causal `estimate_series` for budgeting."""
+        its causal `estimate_series` for budgeting (per device when the
+        estimator is an `EstimatorBank` and `device_ids` is given).
+        `estimated=True` marks `t_input` as already budget-side (the
+        caller ran `estimate_series` itself, e.g. to inspect the
+        estimates for outage detection) — estimation is skipped so
+        observations are never fed twice."""
         t_input = np.asarray(t_input, np.float64)
-        if self.t_estimator is not None:
-            t_input = self.t_estimator.estimate_series(t_input)
+        if not estimated:
+            t_input = self.estimate_series(t_input, device_ids=device_ids)
         return self.policy.select_batch(
             self.current_profiles(), np.asarray(t_sla, np.float64),
             t_input, realized=realized, detail=detail)
 
     def submit(self, req, *, now: float = 0.0) -> RouteDecision:
         """Route one request and enqueue it on its model's queue."""
-        d = self.route(req.sla_ms or 1e9, req.t_input_ms, now=now)
+        d = self.route(req.sla_ms or 1e9, req.t_input_ms, now=now,
+                       device_id=getattr(req, "device_id", None))
         req.model = d.name
         self.queues[d.name].submit(req)
         return d
@@ -164,7 +197,8 @@ class Router:
             return []
         t_sla = np.array([r.sla_ms or 1e9 for r in requests])
         t_in = np.array([r.t_input_ms for r in requests])
-        idx = self.route_batch(t_sla, t_in)
+        devs = [getattr(r, "device_id", None) for r in requests]
+        idx = self.route_batch(t_sla, t_in, device_ids=devs)
         names = []
         for r, i in zip(requests, idx):
             name = self.order[int(i)]

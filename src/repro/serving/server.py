@@ -36,14 +36,22 @@ class ServerMetrics:
     latencies_ms: list = field(default_factory=list)
     accuracies: list = field(default_factory=list)
     selections: dict = field(default_factory=dict)
+    # device_id -> [served, violations] (fleet traffic; "<none>" for
+    # untagged requests).
+    by_device: dict = field(default_factory=dict)
 
     @property
     def attainment(self) -> float:
         return 1.0 - self.violations / max(self.served, 1)
 
+    def record_device(self, device_id, ok: bool):
+        entry = self.by_device.setdefault(device_id or "<none>", [0, 0])
+        entry[0] += 1
+        entry[1] += int(not ok)
+
     def summary(self) -> dict:
         lat = np.array(self.latencies_ms) if self.latencies_ms else np.zeros(1)
-        return {
+        out = {
             "served": self.served,
             "attainment": self.attainment,
             "accuracy": float(np.mean(self.accuracies)) if self.accuracies else 0.0,
@@ -51,6 +59,11 @@ class ServerMetrics:
             "p95_ms": float(np.percentile(lat, 95)),
             "selections": dict(self.selections),
         }
+        if self.by_device:
+            out["by_device"] = {
+                d: {"served": n, "attainment": 1.0 - v / max(n, 1)}
+                for d, (n, v) in sorted(self.by_device.items())}
+        return out
 
 
 class CNNSelectServer:
@@ -92,16 +105,18 @@ class CNNSelectServer:
     def current_profiles(self) -> List[ModelProfile]:
         return self.router.current_profiles()
 
-    def select(self, t_sla: float, t_input: float) -> str:
+    def select(self, t_sla: float, t_input: float,
+               device_id: Optional[str] = None) -> str:
         """Budget from the observed upload time via the router's
-        estimator (identity when none is attached), then select."""
+        estimator (identity when none is attached; keyed per device
+        when the estimator is an `EstimatorBank`), then select."""
         return self.order[self.router.select(
-            t_sla, self.router.observe_t_input(t_input))]
+            t_sla, self.router.observe_t_input(t_input, device_id))]
 
     def handle(self, req: Request, t_sla: float) -> dict:
         """Serve one request batch-of-one style (the prototype evaluation
         path, Fig 12). Returns the per-request record."""
-        name = self.select(t_sla, req.t_input_ms)
+        name = self.select(t_sla, req.t_input_ms, req.device_id)
         m = self.models[name]
         t0 = time.perf_counter()
         B = m.engine.batch_size
@@ -116,5 +131,6 @@ class CNNSelectServer:
         self.metrics.latencies_ms.append(e2e)
         self.metrics.accuracies.append(m.accuracy)
         self.metrics.selections[name] = self.metrics.selections.get(name, 0) + 1
+        self.metrics.record_device(req.device_id, ok)
         return {"model": name, "e2e_ms": e2e, "ok": ok,
-                "tokens": toks[0].tolist()}
+                "device": req.device_id, "tokens": toks[0].tolist()}

@@ -3,14 +3,24 @@ seeded with empirical CNN execution-time and network measurements).
 
 Each request: T_input drawn from the network process (stationary,
 regime-switching Markov, or trace replay — whole-trace vectorized; see
-serving/network.py and DESIGN.md §9); the policy sees the budget-side
-upload time (the observation, or a `TInputEstimator`'s causal estimate
-when `SimConfig.t_estimator` is set) and the profile store; the selected
-model's
-execution time is sampled from its (mu, sigma); cold starts and queueing
-at a fixed-capacity server are modeled; SLA attainment and effective
-accuracy are recorded. Hedged requests (straggler mitigation) optionally
-re-issue to a second replica at the p95 mark.
+serving/network.py and DESIGN.md §9) or, with `SimConfig.fleet`, from
+the issuing *device's* own process (`serving/fleet.py`, DESIGN.md §10);
+the policy sees the budget-side upload time (the observation, or a
+`TInputEstimator` / per-device `EstimatorBank` causal estimate) and the
+profile store; the selected model's execution time is sampled from its
+(mu, sigma); cold starts and queueing at `n_servers` fixed-capacity
+replicas are modeled; SLA attainment and effective accuracy are
+recorded.
+
+Hedging/fallback (`SimConfig.hedge`):
+- ``"p95"`` — legacy straggler mitigation: re-issue to the second
+  replica when queueing alone would eat >5% of the SLA.
+- ``"outage"`` — outage-aware (MDInference-style): a request whose
+  device estimator has entered a degraded regime (estimate >
+  `outage_factor` x the device's prior mean) is hedged to the second
+  replica; if the device can run a model locally and the estimated
+  cloud path cannot meet the SLA at all, it *falls back on-device*
+  (`core.selection.on_device_fallback_decision`) and never uploads.
 
 Selection is vectorized (DESIGN.md §3): the whole trace goes through the
 Router's `route_batch` — for cnnselect that is the jit'd
@@ -26,10 +36,14 @@ from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core.selection import ModelProfile, Policy
+from repro.core.selection import (ModelProfile, Policy,
+                                  on_device_fallback_decision)
+from repro.serving.fleet import EstimatorBank, FleetMixture, make_fleet
 from repro.serving.network import (NetworkProcess, TInputEstimator,
                                    make_estimator, make_network)
 from repro.serving.router import Router
+
+HEDGE_MODES = ("none", "p95", "outage")
 
 
 @dataclass
@@ -39,7 +53,7 @@ class SimConfig:
     n_requests: int = 10000
     # A NETWORKS name (stationary, paper behaviour), a NETWORK_SCENARIOS
     # name (regime-switching Markov), "trace:<name>", or a prebuilt
-    # NetworkProcess.
+    # NetworkProcess. Ignored when `fleet` is set.
     network: Union[str, NetworkProcess] = "campus_wifi"
     # Any registry spec (cnnselect | greedy | greedy_nw | random | oracle
     # | static:<name>) or a prebuilt Policy object.
@@ -48,13 +62,38 @@ class SimConfig:
     seed: int = 0
     arrival_rate_hz: float = 0.0   # 0 = closed loop (no queueing)
     n_servers: int = 1
+    # Hedging/fallback policy: "none" | "p95" | "outage" (see module
+    # docstring). The legacy boolean `hedge_at_p95=True` maps to "p95".
+    hedge: str = "none"
     hedge_at_p95: bool = False
+    # A device estimate is "degraded" when it exceeds this factor times
+    # the device's prior (long-run) mean — the outage-regime detector.
+    outage_factor: float = 2.0
+    # Allow degraded devices with an on-device profile to serve locally
+    # when the estimated cloud path cannot meet the SLA (hedge="outage").
+    on_device_fallback: bool = True
     memory_budget_bytes: Optional[int] = None
     prewarm: bool = True
     # Budget-side T_input source: None = the observed per-request upload
     # time (paper behaviour); or "mean" | "ewma[:alpha]" | "pctl[:q]" |
     # a TInputEstimator (online estimation under time-varying networks).
+    # With `fleet` set, the spec is instantiated per device in an
+    # `EstimatorBank` (each device's estimator sees only its own
+    # observations, primed with its own process mean).
     t_estimator: Union[str, TInputEstimator, None] = None
+    # Device fleet: a FLEET_SCENARIOS name or a prebuilt FleetMixture.
+    # None (default) keeps the single shared network process — the
+    # golden-pinned pre-fleet path.
+    fleet: Union[str, FleetMixture, None] = None
+    # Observation staleness fed to the estimator(s): 0 = server-side
+    # view (previous upload already measured); 1 = ModiPick's
+    # client-side pre-upload view (one RTT behind).
+    estimator_lag: int = 0
+    # "device": the bank keys estimation on each request's device
+    # (default). "global": one shared estimator over the interleaved
+    # fleet trace — the pre-fleet budgeting strawman, kept as an
+    # ablation for benchmarks.
+    estimator_scope: str = "device"
 
 
 @dataclass
@@ -64,23 +103,32 @@ class SimResult:
     mean_latency: float
     p50_latency: float
     p95_latency: float
-    selections: np.ndarray       # (N,) model indices
+    selections: np.ndarray       # (N,) model indices; -1 = on-device
     latencies: np.ndarray
     violations: np.ndarray       # bool
     cold_starts: int
-    hedges: int = 0
+    hedges: int = 0              # replica re-issues (max one/request)
+    fallbacks: int = 0           # requests served on-device
     regimes: Optional[np.ndarray] = None       # (N,) network regime ids
     regime_names: Optional[Sequence[str]] = None
     accuracies: Optional[np.ndarray] = None    # (N,) selected A(m)
+    degraded: Optional[np.ndarray] = None      # (N,) outage-detector bool
+    device_index: Optional[np.ndarray] = None  # (N,) fleet device index
+    device_ids: Optional[Sequence[str]] = None
 
     def selection_histogram(self, names: Sequence[str]) -> Dict[str, float]:
-        h = np.bincount(self.selections, minlength=len(names)) / len(
-            self.selections)
-        return {n: float(f) for n, f in zip(names, h)}
+        cloud = self.selections[self.selections >= 0]
+        h = np.bincount(cloud, minlength=len(names)) / len(self.selections)
+        out = {n: float(f) for n, f in zip(names, h)}
+        n_fb = int((self.selections < 0).sum())
+        if n_fb:
+            out["<on-device>"] = n_fb / len(self.selections)
+        return out
 
     def per_regime(self) -> Dict[str, Dict[str, float]]:
         """Attainment / accuracy / latency split by network regime
-        (time-varying processes; one bucket for stationary runs)."""
+        (time-varying processes; one bucket for stationary runs; fleet
+        runs carry device-prefixed regime names)."""
         if self.regimes is None:
             return {}
         names = self.regime_names or [
@@ -99,24 +147,89 @@ class SimResult:
                 out[name]["accuracy"] = float(self.accuracies[mask].mean())
         return out
 
+    def per_device(self) -> Dict[str, Dict[str, float]]:
+        """Attainment / accuracy / latency / fallback share split by
+        device (fleet runs only)."""
+        if self.device_index is None:
+            return {}
+        names = self.device_ids or [
+            f"device{d}" for d in range(int(self.device_index.max()) + 1)]
+        out: Dict[str, Dict[str, float]] = {}
+        for d, name in enumerate(names):
+            mask = self.device_index == d
+            if not mask.any():
+                continue
+            out[name] = {
+                "share": float(mask.mean()),
+                "attainment": float(1.0 - self.violations[mask].mean()),
+                "mean_latency": float(self.latencies[mask].mean()),
+                "fallback_share": float(
+                    (self.selections[mask] < 0).mean()),
+            }
+            if self.accuracies is not None:
+                out[name]["accuracy"] = float(self.accuracies[mask].mean())
+            if self.degraded is not None:
+                out[name]["degraded_share"] = float(
+                    self.degraded[mask].mean())
+        return out
+
+
+def _hedge_mode(cfg: SimConfig) -> str:
+    mode = cfg.hedge
+    if mode not in HEDGE_MODES:
+        raise ValueError(f"unknown hedge mode {mode!r}; known: "
+                         f"{', '.join(HEDGE_MODES)}")
+    if cfg.hedge_at_p95:                 # legacy boolean knob
+        if mode not in ("none", "p95"):
+            raise ValueError("hedge_at_p95=True conflicts with "
+                             f"hedge={mode!r}; set one of them")
+        mode = "p95"
+    return mode
+
+
+def _make_sim_estimator(cfg: SimConfig, fleet: Optional[FleetMixture],
+                        net: Optional[NetworkProcess]):
+    """Resolve SimConfig.t_estimator for the run: a per-device
+    `EstimatorBank` when a fleet (or a lag) is involved, a plain
+    deep-copied estimator otherwise. simulate() must never mutate a
+    caller's estimator instance (sla_sweep reuses one config)."""
+    spec = cfg.t_estimator
+    if isinstance(spec, TInputEstimator):
+        spec = copy.deepcopy(spec)
+    if cfg.estimator_lag < 0:
+        raise ValueError(f"estimator_lag must be >= 0, "
+                         f"got {cfg.estimator_lag}")
+    if fleet is None and cfg.estimator_lag == 0:
+        # Pre-fleet path, bit-identical to the golden-pinned behaviour.
+        if isinstance(spec, TInputEstimator) and spec.prior is None:
+            spec.prior = net.mean        # instances get the same prior
+        return make_estimator(spec, prior=net.mean)  # a string spec would
+    if spec is None and cfg.estimator_lag > 0:
+        # Stale view of raw observations = last *known* upload time.
+        spec = "ewma:1.0"
+    if spec is None:
+        return None
+    if fleet is not None:
+        return EstimatorBank(spec, priors=fleet.priors(),
+                             default_prior=fleet.mean,
+                             lag=cfg.estimator_lag)
+    # Single shared process but a stale (lagged) view: one bank entry.
+    return EstimatorBank(spec, default_prior=net.mean,
+                         lag=cfg.estimator_lag)
+
 
 def simulate(profiles: Sequence[ModelProfile], cfg: SimConfig) -> SimResult:
     rng = np.random.default_rng(cfg.seed)
-    net = make_network(cfg.network)
+    fleet = make_fleet(cfg.fleet)
+    net = make_network(cfg.network) if fleet is None else None
+    hedge = _hedge_mode(cfg)
     # Decorrelate the policy's RNG stream from the trace rng above —
     # seeding both with cfg.seed would make e.g. the random baseline's
     # picks depend on the very draws that generated the workload.
     policy_seed = int(np.random.SeedSequence([cfg.seed, 1]).generate_state(1)[0])
     # The estimator's cold-start prior is the process's long-run mean —
-    # exactly what a server trusting offline measurements would use. A
-    # prebuilt instance is copied: simulate() must not leak estimator
-    # state across runs (sla_sweep reuses one config's estimator).
-    est_spec = cfg.t_estimator
-    if isinstance(est_spec, TInputEstimator):
-        est_spec = copy.deepcopy(est_spec)
-        if est_spec.prior is None:      # instances get the same prior
-            est_spec.prior = net.mean   # a string spec would
-    estimator = make_estimator(est_spec, prior=net.mean)
+    # exactly what a server trusting offline measurements would use.
+    estimator = _make_sim_estimator(cfg, fleet, net)
     router = Router(profiles, policy=cfg.policy,
                     t_threshold=cfg.t_threshold,
                     stage2_variant=cfg.stage2_variant, seed=policy_seed,
@@ -127,7 +240,21 @@ def simulate(profiles: Sequence[ModelProfile], cfg: SimConfig) -> SimResult:
         router.prewarm()
 
     N = cfg.n_requests
-    t_inputs, regimes = net.sample_trace(rng, N)
+    if fleet is None:
+        t_inputs, regimes = net.sample_trace(rng, N)
+        device_index = device_keys = None
+        regime_names = net.regime_names()
+        device_ids: Optional[List[str]] = None
+        prior_mean = np.full(N, net.mean)
+    else:
+        ftrace = fleet.sample_trace(rng, N)
+        t_inputs, regimes = ftrace.t_input, ftrace.regime
+        device_index = ftrace.device_index
+        device_keys = ftrace.device_keys()
+        regime_names = ftrace.regime_names
+        device_ids = ftrace.device_ids
+        prior_mean = np.array(
+            [p.mean for p in fleet.processes])[device_index]
     # Pre-sample each model's hypothetical execution time per request so
     # the oracle and the actual run see consistent draws.
     exec_samples = np.stack(
@@ -143,15 +270,52 @@ def simulate(profiles: Sequence[ModelProfile], cfg: SimConfig) -> SimResult:
 
     # Vectorized admission: the entire trace in chunked select_batch
     # calls. Profiles are static within a run, so batching the policy up
-    # front is equivalent to asking it per event.
+    # front is equivalent to asking it per event. The budget-side
+    # estimates are materialized first (router state advances exactly
+    # once per observation) so the outage detector can read them.
+    if cfg.estimator_scope not in ("device", "global"):
+        raise ValueError(f"unknown estimator_scope "
+                         f"{cfg.estimator_scope!r}; known: device, global")
+    est_keys = device_keys if cfg.estimator_scope == "device" else None
+    t_est = router.estimate_series(t_inputs, device_ids=est_keys)
     sel = np.asarray(router.route_batch(
-        np.full(N, cfg.t_sla), t_inputs, realized=exec_samples), np.int64)
+        np.full(N, cfg.t_sla), t_est, realized=exec_samples,
+        estimated=True), np.int64)
+
+    # Outage detection + on-device fallback (hedge="outage" only): a
+    # device is in a degraded regime when its estimate has risen past
+    # `outage_factor` x its own prior mean; it serves locally when the
+    # estimated cloud path cannot meet the SLA but the device can.
+    degraded = fb_mask = None
+    od_latency = od_accuracy = None
+    if hedge == "outage":
+        degraded = t_est > cfg.outage_factor * prior_mean
+        if fleet is not None and cfg.on_device_fallback:
+            od_ms = np.array([d.on_device_ms
+                              for d in fleet.devices])[device_index]
+            od_sg = np.array([d.on_device_sigma
+                              for d in fleet.devices])[device_index]
+            od_acc = np.array([d.on_device_accuracy
+                               for d in fleet.devices])[device_index]
+            fastest_mu = min(p.mu for p in profiles)
+            fb_mask = degraded & on_device_fallback_decision(
+                cfg.t_sla, t_est, fastest_mu, od_ms)
+            od_latency = np.maximum(
+                rng.normal(od_ms, od_sg + 1e-9),
+                0.1 * np.maximum(od_ms, 1e-9))
+            od_accuracy = od_acc
 
     lat = np.zeros(N)
-    hedges = 0
+    hedges = fallbacks = 0
     now = 0.0
     for i in range(N):
         now = arrivals[i]
+        if fb_mask is not None and fb_mask[i]:
+            # On-device fallback: no upload, no queue, no cold start.
+            lat[i] = od_latency[i]
+            sel[i] = -1
+            fallbacks += 1
+            continue
         ti = t_inputs[i]
         idx = sel[i]
         startup = zoo.ensure_hot(profiles[idx].name, now, rng)
@@ -161,10 +325,13 @@ def simulate(profiles: Sequence[ModelProfile], cfg: SimConfig) -> SimResult:
             s = int(np.argmin(server_free))
             start = max(now + ti, server_free[s])
             queue_wait = start - (now + ti)
-            if (cfg.hedge_at_p95 and cfg.n_servers > 1
-                    and queue_wait > 0.05 * cfg.t_sla):
-                # Hedge: re-issue to the next server if queueing alone
-                # would eat >5% of the SLA (straggler mitigation).
+            do_hedge = cfg.n_servers > 1 and (
+                (hedge == "p95" and queue_wait > 0.05 * cfg.t_sla)
+                or (hedge == "outage" and degraded[i]))
+            if do_hedge:
+                # Hedge: re-issue to the next server (straggler
+                # mitigation); counted once per request whether or not
+                # the second replica wins.
                 s2 = int(np.argsort(server_free)[1])
                 start2 = max(now + ti, server_free[s2])
                 if start2 < start:
@@ -175,9 +342,11 @@ def simulate(profiles: Sequence[ModelProfile], cfg: SimConfig) -> SimResult:
         else:
             queue = 0.0  # closed loop: requests are independent
         lat[i] = ti + queue + exec_t + ti  # up + queue + exec + down
-
     viol = lat > cfg.t_sla
-    acc = np.array([profiles[j].accuracy for j in sel])
+    prof_acc = np.array([p.accuracy for p in profiles])
+    acc = prof_acc[np.maximum(sel, 0)]
+    if od_accuracy is not None:
+        acc = np.where(sel < 0, od_accuracy, acc)
     return SimResult(
         attainment=float(1.0 - viol.mean()),
         accuracy=float(acc.mean()),
@@ -189,9 +358,13 @@ def simulate(profiles: Sequence[ModelProfile], cfg: SimConfig) -> SimResult:
         violations=viol,
         cold_starts=zoo.total_cold_starts,
         hedges=hedges,
+        fallbacks=fallbacks,
         regimes=regimes,
-        regime_names=net.regime_names(),
+        regime_names=regime_names,
         accuracies=acc,
+        degraded=degraded,
+        device_index=device_index,
+        device_ids=device_ids,
     )
 
 

@@ -126,10 +126,17 @@ def spec_for(axes: Tuple[str, ...], rules: dict) -> P:
         if m is None:
             entries.append(None)
             continue
-        ms = (m,) if isinstance(m, str) else tuple(m)
-        ms = tuple(a for a in ms if a not in used)
+        if isinstance(m, str):
+            entries.append(None if m in used else m)
+            used.add(m)
+            continue
+        # Tuple rules stay tuples even when deduped down to one axis:
+        # jax keeps P(('data',)) distinct from P('data'), and the rule
+        # tables use tuple form for the (possibly multi-axis) fsdp /
+        # data axes.
+        ms = tuple(a for a in m if a not in used)
         used.update(ms)
-        entries.append(ms[0] if len(ms) == 1 else (ms if ms else None))
+        entries.append(ms if ms else None)
     return P(*entries)
 
 

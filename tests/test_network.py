@@ -164,6 +164,19 @@ def test_make_network_resolution():
         make_network(("campus_wifi",))      # non-str, non-process spec
 
 
+def test_legacy_estimate_t_input_shim_deprecated():
+    """The pre-estimator shim still answers (observed, else the mean)
+    but now warns: the estimator API (`make_estimator`) owns budgeting."""
+    net = NetworkModel.named("campus_wifi")
+    with pytest.deprecated_call():
+        assert net.estimate_t_input(42.0) == 42.0
+    with pytest.deprecated_call():
+        assert net.estimate_t_input() == net.mean_ms
+    # The replacements answer identically, warning-free.
+    assert make_estimator("observed").estimate(observed=42.0) == 42.0
+    assert make_estimator("mean", prior=net.mean).estimate() == net.mean_ms
+
+
 # -- estimators -------------------------------------------------------------
 
 def test_estimator_registry():

@@ -53,6 +53,33 @@ def test_simulator_numbers_pinned(network, policy):
     assert r.mean_latency == pytest.approx(lat, abs=1e-9)
 
 
+def test_fleet_none_is_the_golden_path():
+    """`fleet=None` (the default) plus the new hedging/fleet knobs at
+    their defaults must be byte-identical to the pinned pre-fleet
+    simulator — the golden values above run through exactly this
+    config."""
+    profs = paper_profiles()
+    base = simulate(profs, SimConfig(t_sla=SLA_MS, n_requests=N_REQUESTS,
+                                     seed=SEED))
+    explicit = simulate(profs, SimConfig(
+        t_sla=SLA_MS, n_requests=N_REQUESTS, seed=SEED, fleet=None,
+        hedge="none", estimator_lag=0, estimator_scope="device"))
+    assert np.array_equal(base.selections, explicit.selections)
+    assert np.array_equal(base.latencies, explicit.latencies)
+    assert base.fallbacks == explicit.fallbacks == 0
+
+
+def test_legacy_hedge_at_p95_maps_to_p95_mode():
+    """The old boolean knob and hedge="p95" are the same policy."""
+    profs = paper_profiles()
+    kw = dict(t_sla=SLA_MS, n_requests=300, seed=SEED,
+              arrival_rate_hz=30.0, n_servers=2)
+    legacy = simulate(profs, SimConfig(**kw, hedge_at_p95=True))
+    mode = simulate(profs, SimConfig(**kw, hedge="p95"))
+    assert np.array_equal(legacy.latencies, mode.latencies)
+    assert legacy.hedges == mode.hedges > 0
+
+
 def test_estimator_none_is_pre_refactor_path():
     """t_estimator=None must be byte-identical to the legacy observed-
     upload-time budgeting — the explicit 'observed' estimator too."""
