@@ -35,6 +35,10 @@ def lm_zoo_profiles(mesh: str = "pod"):
         mu = step_ms * N_TOKENS
         caps[cfg.name] = np.log(cfg.active_param_count())
         profs.append((cfg.name, mu))
+    if not caps:
+        # No dry-run results on this host (fresh checkout / CI): run()
+        # reports the lmzoo.missing row instead of crashing on min().
+        return []
     lo = min(caps.values())
     hi = max(caps.values())
     out = []

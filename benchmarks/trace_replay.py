@@ -1,0 +1,312 @@
+"""Sim-to-real trace replay (ROADMAP "Trace capture"; DESIGN.md §11).
+
+Three sections, each a capture→persist→replay round trip:
+
+1. **Prototype capture** (``trace_replay.proto.*``) — a real 2-model
+   `CNNSelectServer` (tiny + small engines executing on this host)
+   serves a time-varying upload trace per registry policy while a
+   `TraceRecorder` captures it; the capture is saved, reloaded
+   (bit-exact round trip asserted), and replayed through the simulator:
+   profiles fitted from the capture's measured execution times, the
+   captured T_input sequence replayed bit-for-bit
+   (`CapturedTraceProcess(mode="exact")`), and the measured execution
+   time of each captured selection injected (`simulate`'s
+   ``exec_override``). The row reports the sim-vs-real attainment gap.
+2. **Simulator round trip** (``trace_replay.sim.*``) — every registry
+   policy (oracle included, which a live server cannot run) on the
+   `lte_outages` regime-switching scenario: capture a run with
+   `Trace.from_sim`, replay it exactly. Deterministic policies
+   reproduce the captured attainment to the request.
+3. **Reference fleet** (``trace_replay.reference_fleet``) — the
+   committed capture (`configs/traces/reference_fleet.jsonl`) rebuilt
+   into a device fleet (`FleetMixture.from_capture`) and replayed
+   through the device-keyed `EstimatorBank` path.
+
+``--check`` exits non-zero when any gap exceeds ``--tol`` (the CI
+trace-roundtrip step); ``--write-reference`` regenerates the committed
+reference capture (numpy-only policy, bit-for-bit reproducible).
+
+Smoke (CI): ``python benchmarks/trace_replay.py --n-requests 200
+--policies cnnselect,greedy_nw --check``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import emit, row
+from repro.configs.paper_zoo import (capture_path, paper_profiles,
+                                     synthetic_trace)
+from repro.core.selection import make_policy
+from repro.serving.fleet import FleetMixture
+from repro.serving.network import TraceReplayProcess
+from repro.serving.simulator import SimConfig, simulate
+from repro.serving.trace import (CapturedTraceProcess, Trace,
+                                 TraceRecorder, load_capture)
+
+# Policies a live server can run (oracle needs realized times).
+PROTO_POLICIES = ("cnnselect", "greedy", "greedy_nw", "random",
+                  "static:small")
+# The full registry, exercised on the simulator round trip.
+SIM_POLICIES = ("cnnselect", "greedy", "greedy_nw", "random",
+                "static:mobilenetv1_10", "oracle")
+SEED = 11
+
+
+def _roundtrip(trace: Trace, tmpdir: str) -> Trace:
+    """save → load → assert bit-exact; returns the reloaded capture."""
+    path = os.path.join(tmpdir, f"{trace.name.replace(':', '_')}.jsonl")
+    trace.save(path)
+    back = Trace.load(path)
+    for col in ("t_arrival", "device_id", "t_input_ms", "regime_id",
+                "model", "sla_ok"):
+        if not np.array_equal(getattr(trace, col), getattr(back, col)):
+            raise AssertionError(f"trace column {col} drifted through "
+                                 f"save/load")
+    if back.meta != trace.meta or back.regime_names != trace.regime_names:
+        raise AssertionError("trace header drifted through save/load")
+    return back
+
+
+def _exec_override(trace: Trace, order) -> np.ndarray:
+    """(N, K) measured-execution injection matrix: the captured
+    selection's measured time per request, NaN (= sample from profile)
+    elsewhere."""
+    n = len(trace)
+    out = np.full((n, len(order)), np.nan)
+    exec_ms = np.asarray(trace.meta["exec_ms"], np.float64)
+    index = {name: k for k, name in enumerate(order)}
+    for i in range(n):
+        k = index.get(str(trace.model[i]))
+        if k is not None:
+            out[i, k] = exec_ms[i]
+    return out
+
+
+# --------------------------------------------------------------------------
+# Section 1: prototype-server capture → simulator replay
+# --------------------------------------------------------------------------
+
+def _build_server():
+    import jax
+
+    from repro.configs import reduced_config
+    from repro.models import init_params
+    from repro.serving.engine import InferenceEngine
+    from repro.serving.server import CNNSelectServer, ServedModel
+
+    models = []
+    cfg_t = reduced_config("stablelm_1_6b")
+    cfg_s = dataclasses.replace(cfg_t, n_layers=6, d_model=192, n_heads=6,
+                                n_kv_heads=6, head_dim=32, d_ff=384)
+    for name, cfg, acc in [("tiny", cfg_t, 0.62), ("small", cfg_s, 0.88)]:
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        eng = InferenceEngine(cfg, params, batch_size=1, max_seq=64)
+        models.append(ServedModel(name=name, engine=eng, accuracy=acc))
+    srv = CNNSelectServer(models, t_threshold=30.0, n_tokens=2)
+    srv.profile_models(prompt_len=8, reps=3)
+    return srv
+
+
+def _capture_profiles(trace: Trace, fallback) -> list:
+    """Per-model profiles fitted from the capture's measured execution
+    times (the distribution the replay should sample for selections the
+    capture did not make), falling back to the server's live profile
+    for models the capture never ran."""
+    out = []
+    exec_ms = np.asarray(trace.meta["exec_ms"], np.float64)
+    for p in fallback:
+        mask = trace.model == p.name
+        if mask.sum() >= 2:
+            mu = float(exec_ms[mask].mean())
+            sigma = max(float(exec_ms[mask].std()), 0.5)
+            out.append(dataclasses.replace(p, mu=mu, sigma=sigma))
+        else:
+            out.append(p)
+    return out
+
+
+def proto_rows(n_requests: int, policies, tol: float, tmpdir: str):
+    from repro.serving.batching import Request
+
+    srv = _build_server()
+    live_profiles = srv.current_profiles()
+    # Time-varying uploads: the wifi→lte step trace scaled to this
+    # host's engine latencies, jittered per request.
+    tin_proc = TraceReplayProcess(
+        0.2 * synthetic_trace("wifi_lte_step", n_requests),
+        jitter_cv=0.15, name="wifi_lte_step*0.2")
+    mus = {p.name: p.mu for p in live_profiles}
+    t_sla = float(2.2 * tin_proc.mean + 1.25 * mus["small"])
+    rows, failures = [], []
+    for spec in policies:
+        srv.metrics = type(srv.metrics)()
+        srv.router.policy = make_policy(spec, t_threshold=30.0, seed=SEED)
+        t_inputs = tin_proc.sample_t_input(
+            np.random.default_rng(SEED), n_requests)
+        rng = np.random.default_rng(SEED + 1)
+        with TraceRecorder(name=f"proto-{spec}").attach(srv) as rec:
+            for i in range(n_requests):
+                req = Request(
+                    arrival=float(i), rid=i,
+                    prompt=rng.integers(0, 50, 8).astype(np.int32),
+                    t_input_ms=float(t_inputs[i]))
+                srv.handle(req, t_sla=t_sla)
+            trace = rec.to_trace(
+                name=f"proto-{spec}", source="server",
+                meta={"policy": spec, "t_sla": t_sla,
+                      "models": [p.name for p in live_profiles]})
+        trace = _roundtrip(trace, tmpdir)
+        profs = _capture_profiles(trace, live_profiles)
+        sim = simulate(profs, SimConfig(
+            t_sla=t_sla, n_requests=len(trace),
+            network=CapturedTraceProcess(trace, mode="exact"),
+            policy=make_policy(spec, t_threshold=30.0, seed=SEED),
+            seed=SEED),
+            exec_override=_exec_override(trace, [p.name for p in profs]))
+        gap = sim.attainment - trace.attainment
+        ok = abs(gap) <= tol
+        if not ok:
+            failures.append(f"proto.{spec}: gap {gap:+.3f} > {tol}")
+        rows.append(row(f"trace_replay.proto.{spec}", 0.0, {
+            "n": len(trace), "sla_ms": f"{t_sla:.0f}",
+            "cap_att": f"{trace.attainment:.3f}",
+            "sim_att": f"{sim.attainment:.3f}", "gap": f"{gap:+.3f}",
+            "within_tol": ok, "roundtrip": "bit-exact"}))
+    return rows, failures
+
+
+# --------------------------------------------------------------------------
+# Section 2: simulator capture → exact replay (every registry policy)
+# --------------------------------------------------------------------------
+
+def sim_rows(n_requests: int, tol: float, tmpdir: str):
+    profs = paper_profiles()
+    names = [p.name for p in profs]
+    rows, failures = [], []
+    for spec in SIM_POLICIES:
+        cap = simulate(profs, SimConfig(
+            t_sla=300.0, n_requests=n_requests, seed=SEED,
+            network="lte_outages", policy=spec, t_estimator="ewma:0.2"))
+        trace = Trace.from_sim(cap, name=f"sim-{spec.replace(':', '_')}",
+                               meta={"models": names, "policy": spec})
+        trace.meta["exec_ms"] = [
+            float(v) for v in cap.latencies - 2.0 * cap.t_inputs]
+        trace = _roundtrip(trace, tmpdir)
+        sim = simulate(profs, SimConfig(
+            t_sla=300.0, n_requests=len(trace),
+            network=CapturedTraceProcess(trace, mode="exact"),
+            policy=spec, seed=SEED, t_estimator="ewma:0.2"),
+            exec_override=_exec_override(trace, names))
+        gap = sim.attainment - trace.attainment
+        ok = abs(gap) <= tol
+        if not ok:
+            failures.append(f"sim.{spec}: gap {gap:+.3f} > {tol}")
+        rows.append(row(f"trace_replay.sim.{spec}", 0.0, {
+            "n": len(trace), "cap_att": f"{trace.attainment:.3f}",
+            "sim_att": f"{sim.attainment:.3f}", "gap": f"{gap:+.3f}",
+            "within_tol": ok}))
+    return rows, failures
+
+
+# --------------------------------------------------------------------------
+# Section 3: the committed reference-fleet capture
+# --------------------------------------------------------------------------
+
+REFERENCE_CFG = dict(t_sla=350.0, n_requests=256, seed=0,
+                     fleet="mixed_fleet", policy="greedy_nw",
+                     t_estimator="ewma:0.2")
+
+
+def write_reference(path: str) -> Trace:
+    """Regenerate the committed reference capture. greedy_nw is
+    numpy-only, so the file is bit-for-bit reproducible across jax
+    versions (pinned by tests/test_trace.py)."""
+    profs = paper_profiles()
+    r = simulate(profs, SimConfig(**REFERENCE_CFG))
+    trace = Trace.from_sim(
+        r, name="reference_fleet",
+        meta={"models": [p.name for p in profs], **REFERENCE_CFG})
+    trace.save(path)
+    return trace
+
+
+def reference_rows(n_requests: int):
+    trace = load_capture("reference_fleet")
+    fleet = FleetMixture.from_capture(trace, mode="loop")
+    r = simulate(paper_profiles(), SimConfig(
+        t_sla=float(trace.meta["t_sla"]), n_requests=n_requests,
+        seed=SEED, fleet=fleet, policy=str(trace.meta["policy"]),
+        t_estimator=str(trace.meta["t_estimator"])))
+    per_dev = {f"att[{k}]": f"{v['attainment']:.3f}"
+               for k, v in r.per_device().items()}
+    return [row("trace_replay.reference_fleet", 0.0, {
+        "cap_att": f"{trace.attainment:.3f}",
+        "replay_att": f"{r.attainment:.3f}",
+        "gap": f"{r.attainment - trace.attainment:+.3f}",
+        "devices": "/".join(trace.device_ids()), **per_dev})]
+
+
+def run_checked(n_requests: int = 400, policies=PROTO_POLICIES,
+                tol: float = 0.02,
+                sections=("proto", "sim", "reference")):
+    rows, failures = [], []
+    with tempfile.TemporaryDirectory() as tmpdir:
+        if "proto" in sections:
+            r, f = proto_rows(n_requests, policies, tol, tmpdir)
+            rows += r
+            failures += f
+        if "sim" in sections:
+            r, f = sim_rows(max(10 * n_requests, 2000), tol, tmpdir)
+            rows += r
+            failures += f
+    if "reference" in sections:
+        rows += reference_rows(max(8 * n_requests, 2000))
+    return rows, failures
+
+
+def run(n_requests: int = 400):
+    """benchmarks.run entry point (rows only; gaps are reported, not
+    gated — the CI smoke uses --check)."""
+    rows, _ = run_checked(n_requests)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--n-requests", type=int, default=400)
+    ap.add_argument("--policies", default=",".join(PROTO_POLICIES),
+                    help="comma-separated registry specs for the "
+                         "prototype section")
+    ap.add_argument("--tol", type=float, default=0.02,
+                    help="max |sim - capture| attainment gap")
+    ap.add_argument("--sections", default="proto,sim,reference")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero when any gap exceeds --tol "
+                         "(the CI sim-to-real smoke)")
+    ap.add_argument("--write-reference", action="store_true",
+                    help="regenerate the committed reference capture")
+    args = ap.parse_args()
+    if args.write_reference:
+        path = capture_path("reference_fleet")
+        trace = write_reference(path)
+        print(f"wrote {path} ({len(trace)} requests, "
+              f"attainment {trace.attainment:.3f})")
+        return
+    rows, failures = run_checked(args.n_requests, args.policies.split(","),
+                                 args.tol, args.sections.split(","))
+    emit(rows)
+    if failures:
+        print("\n".join(f"FAIL {f}" for f in failures), file=sys.stderr)
+        if args.check:
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,8 @@
 
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
 from repro.core.selection import ModelProfile
@@ -86,6 +88,12 @@ NETWORK_SCENARIOS = {
 }
 
 
+# The synthetic mean-T_input traces `synthetic_trace` can build — the
+# `trace:<name>` half of the trace registry (`capture_names()` is the
+# recorded half).
+SYNTHETIC_TRACES = ("wifi_lte_step", "diurnal", "sawtooth_congestion")
+
+
 def synthetic_trace(name: str, n: int = 2048):
     """Synthetic mean-T_input traces (ms per request position) for
     `serving.network.TraceReplayProcess`:
@@ -108,7 +116,37 @@ def synthetic_trace(name: str, n: int = 2048):
         ramp = (i % period) / period
         return wifi + (hotspot - wifi) * ramp
     raise ValueError(f"unknown synthetic trace {name!r}; known: "
-                     f"wifi_lte_step, diurnal, sawtooth_congestion")
+                     f"{', '.join(SYNTHETIC_TRACES)}")
+
+
+# --------------------------------------------------------------------------
+# Recorded captures (serving.trace.Trace files committed under traces/)
+# --------------------------------------------------------------------------
+
+_TRACES_DIR = os.path.join(os.path.dirname(__file__), "traces")
+
+# Registered capture scenarios for `make_network("capture:<name>")` /
+# `serving.trace.load_capture`: each entry names a committed capture
+# file and the default replay mode (`serving.trace.CapturedTraceProcess`).
+# `reference_fleet` is the ground-truth workload the sim-to-real CI loop
+# pins: a mixed_fleet greedy_nw simulator run captured by
+# `benchmarks/trace_replay.py --write-reference` (numpy-only policy, so
+# regeneration is bit-for-bit reproducible across jax versions).
+CAPTURE_SCENARIOS = {
+    "reference_fleet": dict(file="reference_fleet.jsonl", mode="loop"),
+}
+
+
+def capture_names():
+    return sorted(CAPTURE_SCENARIOS)
+
+
+def capture_path(name: str) -> str:
+    """Path of a registered capture file (see `CAPTURE_SCENARIOS`)."""
+    if name not in CAPTURE_SCENARIOS:
+        raise ValueError(f"unknown capture {name!r}; known: "
+                         f"{', '.join(capture_names())}")
+    return os.path.join(_TRACES_DIR, CAPTURE_SCENARIOS[name]["file"])
 
 # On-device end-to-end inference (ms), Fig 5/6 & Table 4 (hot model).
 DEVICES = {

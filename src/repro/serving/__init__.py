@@ -15,8 +15,13 @@ from repro.serving.network import (MarkovProcess, NetworkProcess,
                                    TraceReplayProcess, make_estimator,
                                    make_network)
 from repro.serving.router import RouteDecision, Router
+from repro.serving.trace import (CapturedTraceProcess, Trace,
+                                 TraceRecorder, load_capture,
+                                 requests_from_trace)
 
 __all__ = ["Router", "RouteDecision", "NetworkProcess",
            "StationaryProcess", "MarkovProcess", "TraceReplayProcess",
            "TInputEstimator", "make_network", "make_estimator",
-           "DeviceProfile", "FleetMixture", "EstimatorBank", "make_fleet"]
+           "DeviceProfile", "FleetMixture", "EstimatorBank", "make_fleet",
+           "Trace", "TraceRecorder", "CapturedTraceProcess",
+           "load_capture", "requests_from_trace"]

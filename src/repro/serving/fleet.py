@@ -35,6 +35,7 @@ Named fleets live in `configs/paper_zoo.DEVICE_TIERS` /
 from __future__ import annotations
 
 import copy
+import dataclasses
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Union
@@ -136,6 +137,49 @@ class FleetMixture:
         return [f"{d.device_id}:{rn}"
                 for d, p in zip(self.devices, self.processes)
                 for rn in p.regime_names()]
+
+    @classmethod
+    def from_capture(cls, trace, *, mode: str = "loop",
+                     name: Optional[str] = None,
+                     profiles: Optional[Dict[str, DeviceProfile]] = None
+                     ) -> "FleetMixture":
+        """Reconstruct a fleet from a multi-device capture
+        (`serving.trace.Trace`): each recorded device becomes a
+        `DeviceProfile` whose radio replays that device's own captured
+        T_input subsequence (a `CapturedTraceProcess`, regime ids
+        preserved) and whose weight is its empirical request share — so
+        recorded fleets replay through the device-keyed `EstimatorBank`
+        path. Non-radio fields come from `profiles[device_id]` when
+        given, else from `DEVICE_TIERS` when the device id names a
+        tier (the `FLEET_SCENARIOS` default), else radio-only."""
+        from repro.serving.trace import CapturedTraceProcess
+        profiles = dict(profiles or {})
+        devices = []
+        for dev, idx in trace.per_device().items():
+            sub_reg = trace.regime_id[idx]
+            # Compact this device's regimes to a local numbering; the
+            # mixture re-prefixes names, so strip an existing "dev:"
+            # prefix (fleet-sourced captures) to avoid "mid:mid:lte".
+            gids, local = np.unique(sub_reg, return_inverse=True)
+            lnames = [trace.regime_names[g].removeprefix(f"{dev}:")
+                      for g in gids]
+            dev_id = dev or "<untagged>"
+            proc = CapturedTraceProcess(
+                trace.t_input_ms[idx], mode=mode, regimes=local,
+                regime_names=lnames, name=f"capture:{dev_id}")
+            weight = len(idx) / len(trace)
+            # Overrides may be keyed by the raw captured id or the
+            # visible one ("" is exposed as "<untagged>").
+            base = profiles.get(dev) or profiles.get(dev_id)
+            if base is not None:
+                devices.append(dataclasses.replace(
+                    base, device_id=dev_id, network=proc, weight=weight))
+            elif dev in DEVICE_TIERS:
+                devices.append(device_tier_profile(
+                    dev, network=proc, weight=weight))
+            else:
+                devices.append(DeviceProfile(dev_id, proc, weight=weight))
+        return cls(devices, name=name or f"capture:{trace.name}")
 
     def sample_trace(self, rng: np.random.Generator,
                      n: int = 1) -> FleetTrace:

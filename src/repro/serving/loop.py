@@ -97,6 +97,11 @@ class ServingLoop:
             for name in self.router.order:
                 self.router.attach_queue(name, self.batchers[name])
         self.metrics = LoopMetrics()
+        # Optional trace capture (serving/trace.py, DESIGN.md §11):
+        # `run` records each drained request with its SLA outcome.
+        # Attach here, not to self.router — the router hook would
+        # record the same request again at admission.
+        self.recorder = None
 
     def run(self, requests: List[Request]) -> LoopMetrics:
         ordered = sorted(requests, key=lambda r: r.arrival)
@@ -135,4 +140,13 @@ class ServingLoop:
                 for r in group:
                     queue_ms = max(0.0, r.start_exec - r.arrival)
                     self.metrics.add(r, name, queue_ms, exec_ms)
+                    if self.recorder is not None:
+                        # sla_ms=0 means "no SLA": the outcome is
+                        # unknown, not met (metrics report ok=True for
+                        # convenience, but a capture must not fabricate
+                        # attainment).
+                        self.recorder.record_request(
+                            r, model=name, exec_ms=exec_ms,
+                            sla_ok=(self.metrics.records[-1]["ok"]
+                                    if r.sla_ms else None))
         return self.metrics

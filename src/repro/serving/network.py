@@ -35,8 +35,9 @@ from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.configs.paper_zoo import (NETWORK_SCENARIOS, NETWORK_STATES,
-                                     NETWORKS, lognormal_params,
+from repro.configs.paper_zoo import (CAPTURE_SCENARIOS, NETWORK_SCENARIOS,
+                                     NETWORK_STATES, NETWORKS,
+                                     SYNTHETIC_TRACES, lognormal_params,
                                      synthetic_trace)
 
 # No network can deliver a request in non-positive time; every process
@@ -299,13 +300,30 @@ class NetworkModel(StationaryProcess):
         return observed if observed is not None else self.mean_ms
 
 
+def _captured_process(name: str, spec: str) -> NetworkProcess:
+    # Lazy import: serving.trace imports NetworkProcess from here.
+    from repro.serving.trace import CapturedTraceProcess, load_capture
+    d = CAPTURE_SCENARIOS[name]
+    return CapturedTraceProcess(load_capture(name),
+                                mode=d.get("mode", "loop"), name=spec)
+
+
+def trace_names() -> List[str]:
+    """Every name ``trace:<name>`` resolves: the synthetic traces plus
+    the registered captures."""
+    return sorted(SYNTHETIC_TRACES) + sorted(CAPTURE_SCENARIOS)
+
+
 def make_network(spec: Union[str, NetworkProcess]) -> NetworkProcess:
     """Resolve a network spec to a process:
 
     - a `NetworkProcess` instance passes through;
     - a `NETWORKS` name -> `StationaryProcess` (paper behaviour);
     - a `NETWORK_SCENARIOS` name -> `MarkovProcess`;
-    - ``trace:<name>`` -> `TraceReplayProcess` over the synthetic trace.
+    - ``trace:<name>`` -> `TraceReplayProcess` over the synthetic trace,
+      or a recorded capture when `<name>` is a `CAPTURE_SCENARIOS` entry;
+    - ``capture:<name>`` -> `CapturedTraceProcess` over the registered
+      recorded capture only.
     """
     if isinstance(spec, NetworkProcess):
         return spec
@@ -318,10 +336,23 @@ def make_network(spec: Union[str, NetworkProcess]) -> NetworkProcess:
         return MarkovProcess.from_scenario(spec)
     head, _, arg = spec.partition(":")
     if head == "trace" and arg:
-        return TraceReplayProcess(synthetic_trace(arg), name=spec)
+        # Mirror the policy-registry error style: one ValueError naming
+        # every resolvable trace (previously an unknown name surfaced
+        # whatever the synthetic-trace builder raised).
+        if arg in SYNTHETIC_TRACES:
+            return TraceReplayProcess(synthetic_trace(arg), name=spec)
+        if arg in CAPTURE_SCENARIOS:
+            return _captured_process(arg, spec)
+        raise ValueError(f"unknown trace {arg!r}; "
+                         f"known: {', '.join(trace_names())}")
+    if head == "capture" and arg:
+        if arg not in CAPTURE_SCENARIOS:
+            raise ValueError(f"unknown capture {arg!r}; known: "
+                             f"{', '.join(sorted(CAPTURE_SCENARIOS))}")
+        return _captured_process(arg, spec)
     raise ValueError(
         f"unknown network {spec!r}; known: {sorted(NETWORKS)} + "
-        f"{sorted(NETWORK_SCENARIOS)} + trace:<name>")
+        f"{sorted(NETWORK_SCENARIOS)} + trace:<name> + capture:<name>")
 
 
 # --------------------------------------------------------------------------

@@ -65,6 +65,10 @@ class Router:
         self.order: List[str] = []
         self.queues: Dict[str, object] = {}
         self.min_sigma = min_sigma
+        # Optional trace capture (serving/trace.py `TraceRecorder`,
+        # DESIGN.md §11): when attached, `submit`/`submit_many` record
+        # each admitted request (sla outcome unknown at admission).
+        self.recorder = None
         for p in profiles or []:
             self.register(p)
 
@@ -187,6 +191,8 @@ class Router:
                        device_id=getattr(req, "device_id", None))
         req.model = d.name
         self.queues[d.name].submit(req)
+        if self.recorder is not None:
+            self.recorder.record_request(req, model=d.name)
         return d
 
     def submit_many(self, requests: Sequence) -> List[str]:
@@ -204,5 +210,7 @@ class Router:
             name = self.order[int(i)]
             r.model = name
             self.queues[name].submit(r)
+            if self.recorder is not None:
+                self.recorder.record_request(r, model=name)
             names.append(name)
         return names

@@ -83,6 +83,9 @@ class CNNSelectServer:
                 name=m.name, accuracy=m.accuracy, mu=0.0, sigma=0.0,
                 size_bytes=m.size_bytes))
         self.metrics = ServerMetrics()
+        # Optional trace capture (serving/trace.py, DESIGN.md §11):
+        # `handle` records each served request, outcome included.
+        self.recorder = None
 
     @property
     def store(self):
@@ -132,5 +135,8 @@ class CNNSelectServer:
         self.metrics.accuracies.append(m.accuracy)
         self.metrics.selections[name] = self.metrics.selections.get(name, 0) + 1
         self.metrics.record_device(req.device_id, ok)
+        if self.recorder is not None:
+            self.recorder.record_request(req, model=name, sla_ok=ok,
+                                         exec_ms=exec_ms)
         return {"model": name, "e2e_ms": e2e, "ok": ok,
                 "device": req.device_id, "tokens": toks[0].tolist()}

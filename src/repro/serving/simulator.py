@@ -115,6 +115,10 @@ class SimResult:
     degraded: Optional[np.ndarray] = None      # (N,) outage-detector bool
     device_index: Optional[np.ndarray] = None  # (N,) fleet device index
     device_ids: Optional[Sequence[str]] = None
+    # Workload capture (serving/trace.py `Trace.from_sim`): the drawn
+    # upload times and arrival clock of this run.
+    t_inputs: Optional[np.ndarray] = None      # (N,) ms
+    arrivals: Optional[np.ndarray] = None      # (N,) ms
 
     def selection_histogram(self, names: Sequence[str]) -> Dict[str, float]:
         cloud = self.selections[self.selections >= 0]
@@ -218,7 +222,14 @@ def _make_sim_estimator(cfg: SimConfig, fleet: Optional[FleetMixture],
                          lag=cfg.estimator_lag)
 
 
-def simulate(profiles: Sequence[ModelProfile], cfg: SimConfig) -> SimResult:
+def simulate(profiles: Sequence[ModelProfile], cfg: SimConfig, *,
+             exec_override: Optional[np.ndarray] = None) -> SimResult:
+    """Run the simulation. `exec_override` replays *measured* execution
+    times (trace capture/replay, DESIGN.md §11): an (N, K) array whose
+    non-NaN entries replace the sampled execution time of model k for
+    request i — a capture knows the measured time of the model it
+    actually ran, so its column is filled and the rest stay NaN
+    (sampled from the profile as usual)."""
     rng = np.random.default_rng(cfg.seed)
     fleet = make_fleet(cfg.fleet)
     net = make_network(cfg.network) if fleet is None else None
@@ -260,6 +271,14 @@ def simulate(profiles: Sequence[ModelProfile], cfg: SimConfig) -> SimResult:
     exec_samples = np.stack(
         [np.maximum(rng.normal(p.mu, p.sigma + 1e-9, N), 0.1 * p.mu)
          for p in profiles], axis=1)  # (N, K)
+    if exec_override is not None:
+        exec_override = np.asarray(exec_override, np.float64)
+        if exec_override.shape != exec_samples.shape:
+            raise ValueError(f"exec_override shape {exec_override.shape} "
+                             f"does not match (N, K) = "
+                             f"{exec_samples.shape}")
+        known = ~np.isnan(exec_override)
+        exec_samples[known] = exec_override[known]
 
     # Optional open-loop queueing.
     if cfg.arrival_rate_hz > 0:
@@ -365,6 +384,8 @@ def simulate(profiles: Sequence[ModelProfile], cfg: SimConfig) -> SimResult:
         degraded=degraded,
         device_index=device_index,
         device_ids=device_ids,
+        t_inputs=t_inputs,
+        arrivals=arrivals,
     )
 
 

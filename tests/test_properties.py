@@ -150,6 +150,77 @@ def test_ewma_series_causal_and_bounded(xs, alpha, prior):
     assert np.array_equal(s[:-1], s2[:-1])
 
 
+# -- Trace codec round trip (serving/trace.py, DESIGN.md §11) --------------
+
+_trace_strategy = st.integers(1, 40).flatmap(lambda n: st.fixed_dictionaries({
+    "t_arrival": st.lists(st.floats(0, 1e7, allow_nan=False,
+                                    allow_infinity=False),
+                          min_size=n, max_size=n),
+    "device_id": st.lists(st.text(
+        alphabet=st.characters(min_codepoint=33, max_codepoint=126),
+        max_size=12), min_size=n, max_size=n),
+    "t_input_ms": st.lists(st.floats(1e-3, 1e6, allow_nan=False,
+                                     allow_infinity=False,
+                                     exclude_min=True),
+                           min_size=n, max_size=n),
+    "regime_id": st.lists(st.integers(0, 5), min_size=n, max_size=n),
+    "model": st.lists(st.text(
+        alphabet=st.characters(min_codepoint=33, max_codepoint=126),
+        max_size=12), min_size=n, max_size=n),
+    "sla_ok": st.lists(st.sampled_from([-1, 0, 1]), min_size=n,
+                       max_size=n),
+}))
+
+
+@settings(max_examples=60, deadline=None)
+@given(cols=_trace_strategy, ext=st.sampled_from(["jsonl", "npz"]),
+       name=st.text(max_size=16), seed=st.integers(0, 2**31 - 1))
+def test_trace_codec_roundtrip_bit_exact(cols, ext, name, seed):
+    """Any valid trace survives save/load bit-exact through both
+    codecs (json float text is shortest-repr, which parses back to the
+    identical double)."""
+    import tempfile
+
+    from repro.serving.trace import Trace
+
+    tr = Trace(regime_names=[f"r{k}" for k in range(6)], name=name,
+               source="property", meta={"seed": seed}, **cols)
+    with tempfile.TemporaryDirectory() as d:
+        path = f"{d}/t.{ext}"
+        tr.save(path)
+        back = Trace.load(path)
+    for col in ("t_arrival", "device_id", "t_input_ms", "regime_id",
+                "model", "sla_ok"):
+        assert np.array_equal(getattr(tr, col), getattr(back, col)), col
+    assert back.regime_names == tr.regime_names
+    assert (back.name, back.source, back.meta) == (tr.name, tr.source,
+                                                   tr.meta)
+    assert back.schema_version == tr.schema_version
+
+
+@settings(max_examples=30, deadline=None)
+@given(cols=_trace_strategy, bad_schema=st.integers(-5, 100))
+def test_trace_schema_mismatch_fails_fast(cols, bad_schema):
+    import json as _json
+    import tempfile
+
+    from repro.serving.trace import TRACE_SCHEMA_VERSION, Trace
+
+    hypothesis.assume(bad_schema != TRACE_SCHEMA_VERSION)
+    tr = Trace(regime_names=[f"r{k}" for k in range(6)], **cols)
+    with tempfile.TemporaryDirectory() as d:
+        path = f"{d}/t.jsonl"
+        tr.save(path)
+        with open(path) as f:
+            lines = f.read().splitlines()
+        header = _json.loads(lines[0])
+        header["schema"] = bad_schema
+        with open(path, "w") as f:
+            f.write("\n".join([_json.dumps(header)] + lines[1:]) + "\n")
+        with pytest.raises(ValueError, match="schema version"):
+            Trace.load(path)
+
+
 # -- int8 error feedback (from test_quant.py) ------------------------------
 
 @settings(max_examples=30, deadline=None)

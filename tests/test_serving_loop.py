@@ -74,3 +74,23 @@ def test_loop_routes_with_cnnselect():
         by_model.setdefault(rec["model"], []).append(rec["rid"])
     # tight SLAs must land on the fast engine
     assert set(by_model.get("fast", [])) >= {0, 1, 2}
+
+
+def test_loop_recorder_captures_run(loop):
+    """The ServingLoop recorder hook (DESIGN.md §11): every drained
+    request lands in the trace with its outcome and measured exec."""
+    from repro.serving.trace import TraceRecorder
+    rng = np.random.default_rng(2)
+    with TraceRecorder().attach(loop) as rec:
+        loop.run(_reqs(4, rng))
+    assert loop.recorder is None
+    tr = rec.to_trace(source="loop")
+    assert len(tr) == 4
+    assert (tr.sla_ok == 1).all()           # generous SLA, outcomes known
+    assert set(tr.model) == {"m"}
+    assert len(tr.meta["exec_ms"]) == 4
+    assert all(e > 0 for e in tr.meta["exec_ms"])
+    # sla_ms=0 means "no SLA": captured as unknown, not fabricated MET.
+    with TraceRecorder().attach(loop) as rec2:
+        loop.run(_reqs(2, rng, sla=0.0))
+    assert (rec2.to_trace(source="loop").sla_ok == -1).all()

@@ -1,0 +1,373 @@
+"""Trace capture & replay tests (serving/trace.py, DESIGN.md §11):
+codec round trips and schema guards, recorder hooks on the serving
+layers, CapturedTraceProcess replay modes, fleet reconstruction from
+multi-device captures, the registered-capture resolution (and the
+trace:<name> error fix), and the committed reference capture's
+bit-for-bit regeneration pin."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_zoo import (CAPTURE_SCENARIOS, SYNTHETIC_TRACES,
+                                     capture_path, paper_profiles)
+from repro.serving.fleet import FleetMixture
+from repro.serving.network import make_network, trace_names
+from repro.serving.router import Router
+from repro.serving.simulator import SimConfig, simulate
+from repro.serving.trace import (CAPTURE_MODES, SLA_UNKNOWN,
+                                 TRACE_SCHEMA_VERSION,
+                                 CapturedTraceProcess, Trace,
+                                 TraceRecorder, load_capture,
+                                 requests_from_trace)
+
+COLUMNS = ("t_arrival", "device_id", "t_input_ms", "regime_id", "model",
+           "sla_ok")
+
+
+def small_trace(n=6, **over):
+    kw = dict(
+        t_arrival=np.arange(n, dtype=np.float64),
+        device_id=np.array(["a", "b", "a", "b", "a", "b"][:n]),
+        t_input_ms=np.linspace(10.0, 60.0, n),
+        regime_id=np.array([0, 1, 0, 1, 0, 1][:n]),
+        model=np.array(["m0", "m1", "m0", "m1", "m0", "m1"][:n]),
+        sla_ok=np.array([1, 0, 1, 1, -1, 1][:n], np.int8),
+        regime_names=["wifi", "lte"],
+        name="unit", source="test", meta={"k": "v"})
+    kw.update(over)
+    return Trace(**kw)
+
+
+def assert_traces_equal(a: Trace, b: Trace):
+    for col in COLUMNS:
+        assert np.array_equal(getattr(a, col), getattr(b, col)), col
+    assert a.regime_names == b.regime_names
+    assert (a.name, a.source, a.meta) == (b.name, b.source, b.meta)
+
+
+# -- codec ------------------------------------------------------------------
+
+@pytest.mark.parametrize("ext", ["jsonl", "npz"])
+def test_trace_roundtrip_bit_exact(tmp_path, ext):
+    tr = small_trace(meta={"exec_ms": [1.5, 2.5, 3.5, 4.5, 5.5, 6.5],
+                           "t_sla": 300.0})
+    # Awkward floats must survive the text codec bit-for-bit too.
+    tr.t_input_ms[0] = 1.0 / 3.0
+    tr.t_input_ms[1] = np.nextafter(63.0, 64.0)
+    path = tmp_path / f"t.{ext}"
+    tr.save(path)
+    assert_traces_equal(tr, Trace.load(path))
+
+
+def test_trace_schema_mismatch_fails_fast(tmp_path):
+    tr = small_trace()
+    path = tmp_path / "t.jsonl"
+    tr.save(path)
+    lines = path.read_text().splitlines()
+    header = json.loads(lines[0])
+    header["schema"] = TRACE_SCHEMA_VERSION + 1
+    path.write_text("\n".join([json.dumps(header)] + lines[1:]) + "\n")
+    with pytest.raises(ValueError, match="schema version"):
+        Trace.load(path)
+    # Not a trace at all -> the kind guard, not a KeyError.
+    path.write_text(json.dumps({"whatever": 1}) + "\n")
+    with pytest.raises(ValueError, match="repro.trace"):
+        Trace.load(path)
+    with pytest.raises(ValueError, match="extension"):
+        tr.save(tmp_path / "t.csv")
+
+
+def test_trace_jsonl_row_count_guard(tmp_path):
+    tr = small_trace()
+    path = tmp_path / "t.jsonl"
+    tr.save(path)
+    lines = path.read_text().splitlines()
+    path.write_text("\n".join(lines[:-1]) + "\n")    # drop one record
+    with pytest.raises(ValueError, match="declares"):
+        Trace.load(path)
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError, match="positive"):
+        small_trace(t_input_ms=np.array([1.0, -2, 3, 4, 5, 6.0]))
+    # NaN would replay as an always-met SLA — rejected at the boundary.
+    with pytest.raises(ValueError, match="finite"):
+        small_trace(t_input_ms=np.array([1.0, np.nan, 3, 4, 5, 6.0]))
+    with pytest.raises(ValueError, match="finite"):
+        small_trace(t_arrival=np.array([0.0, np.inf, 2, 3, 4, 5.0]))
+    with pytest.raises(ValueError, match="finite"):
+        CapturedTraceProcess([5.0, np.nan])
+    with pytest.raises(ValueError, match="rows"):
+        small_trace(model=np.array(["m0"]))
+    with pytest.raises(ValueError, match="no name"):
+        small_trace(regime_names=["only_one"])
+    with pytest.raises(ValueError, match="-1/0/1"):
+        small_trace(sla_ok=np.array([1, 0, 2, 1, 1, 1], np.int8))
+    with pytest.raises(ValueError, match="at least one"):
+        Trace(t_arrival=np.array([]), device_id=np.array([]),
+              t_input_ms=np.array([]), regime_id=np.array([]),
+              model=np.array([]), sla_ok=np.array([]))
+    tr = small_trace()
+    assert tr.attainment == pytest.approx(4 / 5)   # one unknown excluded
+    assert tr.device_ids() == ["a", "b"]
+    assert np.array_equal(tr.per_device()["b"], [1, 3, 5])
+    # Over-wide strings are rejected, never silently truncated
+    # (truncation could merge distinct device keys).
+    with pytest.raises(ValueError, match="64 chars"):
+        small_trace(device_id=np.array(["x" * 65] + ["b"] * 5))
+    with pytest.raises(ValueError, match="64 chars"):
+        small_trace(model=np.array(["m" * 65] + ["m1"] * 5))
+    with pytest.raises(ValueError, match="64 chars"):
+        TraceRecorder().record(t_arrival=0.0, t_input_ms=1.0,
+                               model="m" * 65)
+
+
+# -- recorder ---------------------------------------------------------------
+
+def test_recorder_router_hook_records_admissions():
+    from repro.serving.batching import Request
+    router = Router(paper_profiles(), policy="greedy_nw")
+    reqs = [Request(arrival=float(i), rid=i,
+                    prompt=np.zeros(4, np.int32), sla_ms=300.0,
+                    t_input_ms=50.0 + i, device_id="d%d" % (i % 2))
+            for i in range(8)]
+    with TraceRecorder().attach(router) as rec:
+        router.submit(reqs[0])
+        router.submit_many(reqs[1:])
+    assert router.recorder is None                  # detached on exit
+    tr = rec.to_trace(source="router")
+    assert len(tr) == 8
+    assert (tr.sla_ok == SLA_UNKNOWN).all()         # outcome unknown
+    assert set(tr.model[:1]) <= set(router.order)
+    assert tr.device_ids() == ["d0", "d1"]
+    np.testing.assert_allclose(tr.t_input_ms, 50.0 + np.arange(8))
+    with pytest.raises(ValueError, match="no recorder hook"):
+        TraceRecorder().attach(object())
+    with pytest.raises(ValueError, match="no requests"):
+        TraceRecorder().to_trace()
+
+
+def test_recorder_rejects_unset_t_input_at_record_time():
+    """Request defaults t_input_ms to 0.0; the recorder must fail at
+    the offending record, not at to_trace() after the run is lost."""
+    rec = TraceRecorder()
+    with pytest.raises(ValueError, match="positive t_input_ms"):
+        rec.record(t_arrival=0.0, t_input_ms=0.0)
+    assert len(rec) == 0
+
+
+def test_recorder_exec_side_channel():
+    rec = TraceRecorder()
+    rec.record(t_arrival=0.0, t_input_ms=10.0, model="m", sla_ok=True,
+               exec_ms=5.0)
+    rec.record(t_arrival=1.0, t_input_ms=11.0, model="m", sla_ok=False,
+               exec_ms=7.0)
+    tr = rec.to_trace()
+    assert tr.meta["exec_ms"] == [5.0, 7.0]
+    assert tr.attainment == 0.5
+    # A mixed capture (some layers outcome-blind) exports no exec_ms.
+    rec.record(t_arrival=2.0, t_input_ms=12.0)
+    assert "exec_ms" not in rec.to_trace().meta
+
+
+def test_requests_from_trace_roundtrip_through_recorder():
+    tr = small_trace()
+    reqs = requests_from_trace(tr, sla_ms=250.0)
+    assert [r.device_id for r in reqs[:2]] == ["a", "b"]
+    rec = TraceRecorder()
+    for r in reqs:
+        rec.record_request(r, model="m0", sla_ok=True)
+    back = rec.to_trace()
+    np.testing.assert_array_equal(back.t_input_ms, tr.t_input_ms)
+    np.testing.assert_array_equal(back.t_arrival, tr.t_arrival)
+    np.testing.assert_array_equal(back.device_id, tr.device_id)
+
+
+# -- replay process ---------------------------------------------------------
+
+def test_captured_process_exact_replay_bit_for_bit():
+    tr = small_trace()
+    # Sub-millisecond measurements must survive exact replay — the
+    # generator-side MIN_T_INPUT_MS clamp does not apply to captures.
+    tr.t_input_ms[0] = 0.4
+    p = CapturedTraceProcess(tr, mode="exact")
+    t, reg = p.sample_trace(np.random.default_rng(0), len(tr))
+    assert np.array_equal(t, tr.t_input_ms)
+    assert t[0] == 0.4
+    assert np.array_equal(reg, tr.regime_id)
+    assert p.regime_names() == ["wifi", "lte"]
+    assert p.mean == pytest.approx(tr.t_input_ms.mean())
+    with pytest.raises(ValueError, match="exact replay"):
+        p.sample_trace(np.random.default_rng(0), len(tr) + 1)
+
+
+def test_captured_process_resampling_modes():
+    tr = small_trace()
+    rng = np.random.default_rng(3)
+    loop = CapturedTraceProcess(tr, mode="loop")
+    t, reg = loop.sample_trace(rng, 2 * len(tr) + 1)
+    assert np.array_equal(t[:len(tr)], tr.t_input_ms)
+    assert np.array_equal(t[len(tr):2 * len(tr)], tr.t_input_ms)
+    # timewarp:2 doubles every dwell; timewarp:0.5 halves (skips).
+    warp = CapturedTraceProcess(tr, mode="timewarp:2")
+    t, _ = warp.sample_trace(rng, 4)
+    assert np.array_equal(t, tr.t_input_ms[[0, 0, 1, 1]])
+    fast = CapturedTraceProcess(tr, mode="timewarp:0.5")
+    t, _ = fast.sample_trace(rng, 3)
+    assert np.array_equal(t, tr.t_input_ms[[0, 2, 4]])
+    # bootstrap: deterministic under a fixed seed, values all captured,
+    # blocks preserve contiguity.
+    boot = CapturedTraceProcess(tr, mode="bootstrap", block=2)
+    a, _ = boot.sample_trace(np.random.default_rng(5), 50)
+    b, _ = boot.sample_trace(np.random.default_rng(5), 50)
+    assert np.array_equal(a, b)
+    assert set(a) <= set(tr.t_input_ms)
+    with pytest.raises(ValueError, match="unknown capture replay mode"):
+        CapturedTraceProcess(tr, mode="shuffle")
+    with pytest.raises(ValueError, match="factor"):
+        CapturedTraceProcess(tr, mode="timewarp:0")
+    with pytest.raises(ValueError, match="takes no"):
+        CapturedTraceProcess(tr, mode="loop:3")
+    assert "exact" in CAPTURE_MODES
+
+
+def test_captured_process_from_arrays():
+    p = CapturedTraceProcess([5.0, 6.0], mode="loop",
+                             regimes=[0, 1], regime_names=["lo", "hi"])
+    t, reg = p.sample_trace(np.random.default_rng(0), 4)
+    assert np.array_equal(reg, [0, 1, 0, 1])
+    assert p.regime_names() == ["lo", "hi"]
+    with pytest.raises(ValueError, match="carries its own"):
+        CapturedTraceProcess(small_trace(), regimes=[0] * 6)
+    with pytest.raises(ValueError, match="align"):
+        CapturedTraceProcess([5.0, 6.0], regimes=[0])
+    with pytest.raises(ValueError, match="cover"):
+        CapturedTraceProcess([5.0, 6.0], regimes=[0, 3],
+                             regime_names=["only", "two"])
+    # Default names always cover sparse regime ids.
+    sparse = CapturedTraceProcess([5.0, 6.0], regimes=[0, 3])
+    assert len(sparse.regime_names()) == 4
+
+
+# -- sim capture / replay ---------------------------------------------------
+
+def _sim_capture(policy="greedy_nw", n=400, fleet=None, network="lte"):
+    profs = paper_profiles()
+    cfg = SimConfig(t_sla=300.0, n_requests=n, seed=9, network=network,
+                    fleet=fleet, policy=policy, t_estimator="ewma:0.2")
+    r = simulate(profs, cfg)
+    return r, Trace.from_sim(r, name="cap",
+                             meta={"models": [p.name for p in profs]})
+
+
+def test_trace_from_sim_and_exact_replay_attainment():
+    r, tr = _sim_capture(network="lte_outages")
+    assert len(tr) == 400
+    assert tr.attainment == pytest.approx(r.attainment)
+    assert tr.regime_names == ["lte", "degraded_lte", "outage"]
+    assert set(tr.model) <= set(p.name for p in paper_profiles())
+    # Exact replay with injected measured execution reproduces the
+    # captured attainment almost to the request (deterministic policy;
+    # only the cold-start prior differs).
+    exec_ms = r.latencies - 2.0 * r.t_inputs
+    over = np.full((len(tr), len(paper_profiles())), np.nan)
+    names = [p.name for p in paper_profiles()]
+    for i, m in enumerate(tr.model):
+        over[i, names.index(str(m))] = exec_ms[i]
+    rep = simulate(paper_profiles(), SimConfig(
+        t_sla=300.0, n_requests=len(tr), seed=9,
+        network=CapturedTraceProcess(tr, mode="exact"),
+        policy="greedy_nw", t_estimator="ewma:0.2"), exec_override=over)
+    assert abs(rep.attainment - tr.attainment) <= 2.0 / len(tr)
+
+
+def test_exec_override_shape_guard():
+    with pytest.raises(ValueError, match="exec_override"):
+        simulate(paper_profiles(), SimConfig(t_sla=300.0, n_requests=10),
+                 exec_override=np.zeros((3, 2)))
+
+
+def test_fleet_from_capture_reconstructs_devices():
+    _, tr = _sim_capture(fleet="mixed_fleet")
+    fl = FleetMixture.from_capture(tr)
+    assert set(fl.device_ids) == {"flagship", "midrange", "budget"}
+    shares = {d: len(ix) / len(tr) for d, ix in tr.per_device().items()}
+    for d, w in zip(fl.devices, fl.weights):
+        assert w == pytest.approx(shares[d.device_id])
+        assert d.on_device_ms > 0 or d.tier == "legacy"   # tier resolved
+    # Device-prefixed regimes compose (no double prefix).
+    assert "midrange:lte" in fl.regime_names()
+    # Replays through the device-keyed estimator-bank path.
+    rep = simulate(paper_profiles(), SimConfig(
+        t_sla=300.0, n_requests=600, seed=1, fleet=fl,
+        policy="greedy_nw", t_estimator="ewma:0.2"))
+    assert set(rep.per_device()) == set(fl.device_ids)
+    assert abs(rep.attainment - tr.attainment) < 0.1
+
+
+def test_fleet_from_capture_untagged_and_overrides():
+    from repro.serving.fleet import DeviceProfile
+    tr = small_trace(device_id=np.array([""] * 6))
+    fl = FleetMixture.from_capture(tr, profiles=None)
+    assert fl.device_ids == ["<untagged>"]
+    assert fl.devices[0].on_device_ms == 0.0
+    # Overrides keyed by the visible id apply to untagged captures too.
+    over = DeviceProfile("x", "lte", on_device_ms=350.0,
+                         on_device_accuracy=0.7)
+    fl2 = FleetMixture.from_capture(tr, profiles={"<untagged>": over})
+    assert fl2.devices[0].on_device_ms == 350.0
+    assert fl2.device_ids == ["<untagged>"]
+
+
+# -- registry resolution (the trace:<name> error fix) -----------------------
+
+def test_make_network_unknown_trace_lists_available():
+    with pytest.raises(ValueError) as e:
+        make_network("trace:no_such_trace")
+    msg = str(e.value)
+    for name in SYNTHETIC_TRACES:
+        assert name in msg
+    for name in CAPTURE_SCENARIOS:
+        assert name in msg
+    with pytest.raises(ValueError) as e:
+        make_network("capture:no_such_capture")
+    assert "reference_fleet" in str(e.value)
+    assert sorted(trace_names()) == sorted(
+        list(SYNTHETIC_TRACES) + list(CAPTURE_SCENARIOS))
+
+
+def test_registered_capture_resolves_through_make_network():
+    p = make_network("capture:reference_fleet")
+    assert isinstance(p, CapturedTraceProcess)
+    assert p.mode == CAPTURE_SCENARIOS["reference_fleet"]["mode"]
+    # trace:<name> reaches captures too (one namespace for replay).
+    p2 = make_network("trace:reference_fleet")
+    assert isinstance(p2, CapturedTraceProcess)
+    t, _ = p.sample_trace(np.random.default_rng(0), 16)
+    assert (t > 0).all()
+    with pytest.raises(ValueError, match="unknown capture"):
+        capture_path("nope")
+
+
+def test_reference_capture_regenerates_bit_for_bit():
+    """The committed capture is exactly what --write-reference
+    produces (numpy-only policy), so the capture→persist→replay loop
+    cannot drift silently."""
+    committed = load_capture("reference_fleet")
+    profs = paper_profiles()
+    r = simulate(profs, SimConfig(
+        t_sla=float(committed.meta["t_sla"]),
+        n_requests=int(committed.meta["n_requests"]),
+        seed=int(committed.meta["seed"]),
+        fleet=str(committed.meta["fleet"]),
+        policy=str(committed.meta["policy"]),
+        t_estimator=str(committed.meta["t_estimator"])))
+    regen = Trace.from_sim(r, name=committed.name,
+                           meta=dict(committed.meta))
+    assert_traces_equal(committed, regen)
+    assert committed.meta["models"] == [p.name for p in profs]
+    assert (committed.sla_ok != SLA_UNKNOWN).all()
+    assert committed.attainment == pytest.approx(
+        1.0 - r.violations.mean())
