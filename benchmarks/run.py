@@ -24,6 +24,7 @@ MODULES = [
     ("fig10_network_conditions", "benchmarks.network_conditions"),
     ("fig10x_network_dynamics", "benchmarks.network_dynamics"),
     ("table4x_fleet_dynamics", "benchmarks.fleet_dynamics"),
+    ("ctrl_adaptive_control", "benchmarks.adaptive_control"),
     ("sim2real_trace_replay", "benchmarks.trace_replay"),
     ("fig12_prototype_e2e", "benchmarks.prototype_e2e"),
     ("fig13_selection_vs_greedy", "benchmarks.selection_vs_greedy"),

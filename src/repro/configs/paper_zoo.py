@@ -191,6 +191,27 @@ FLEET_SCENARIOS = {
 }
 
 
+# Named adaptive-controller presets for `serving.control.make_controller`
+# (`SimConfig.controller`, CNNSelectServer/ServingLoop `controller=`):
+# an ordered mode table (core.selection.CONTROL_MODES names, least ->
+# most conservative), the change-point detector watching each device's
+# monitor-estimator residuals, and the anti-thrash cooldown. "reactive"
+# is the benchmark default; "conservative" needs a stronger/longer
+# shift before it escalates (fewer false switches on heavy-tailed
+# stationary traffic).
+CONTROLLER_SCENARIOS = {
+    "reactive": dict(modes=("stationary", "degraded"),
+                     detector="cusum:8", monitor="ewma:0.2",
+                     cooldown=8),
+    "conservative": dict(modes=("stationary", "degraded"),
+                         detector="cusum:16", monitor="ewma:0.1",
+                         cooldown=32),
+    "ph_reactive": dict(modes=("stationary", "degraded"),
+                        detector="ph:8", monitor="ewma:0.2",
+                        cooldown=8),
+}
+
+
 def paper_profiles(subset=None):
     """ModelProfile list from Table 5 (top-1 accuracy as A(m))."""
     names = subset or list(TABLE5)

@@ -455,6 +455,71 @@ class OraclePolicy(Policy):
         return BatchSelection(idx) if detail else idx
 
 
+# --------------------------------------------------------------------------
+# Control modes: the (policy, hedge, estimator) operating points the
+# online control plane switches between (serving/control.py)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ControlMode:
+    """One operating point of the serving control plane: which policy
+    budgets, which estimator feeds the budget, and how aggressively the
+    stack hedges/falls back. The `AdaptiveController`
+    (serving/control.py) escalates through an *ordered* list of modes
+    on detected network degradation and de-escalates on recovery.
+
+    `policy=None` keeps the stack's base policy (only the budgeting
+    side changes); `degraded=True` marks the mode as a degraded-regime
+    operating point — requests served under it count as degraded for
+    hedging/fallback purposes (the detector, not the crude
+    `outage_factor` threshold, is the degradation signal)."""
+
+    name: str
+    policy: Optional[str] = None       # None = keep the base policy
+    t_estimator: Optional[str] = None  # None = budget from observations
+    hedge: str = "none"                # "none" | "p95" | "outage"
+    degraded: bool = False
+    on_device_fallback: bool = False
+
+
+# Named modes the adaptive controller's tables reference. Ordered
+# tables (configs/paper_zoo.CONTROLLER_SCENARIOS) list them least ->
+# most conservative; the controller walks the list on alarms.
+CONTROL_MODES: Dict[str, ControlMode] = {
+    # Stationary operation: the paper's behaviour — budget from each
+    # request's observed upload time — with the per-request outage
+    # safety valve armed (spike-gated hedging/fallback for the
+    # individual uploads whose estimated cloud path cannot meet the
+    # SLA; `degraded=False`, so the gate is the outage_factor rule, not
+    # the whole regime).
+    "stationary": ControlMode(name="stationary", t_estimator=None,
+                              hedge="outage", on_device_fallback=True),
+    # Detected degradation: budget from a conservative rolling
+    # percentile, hedge degraded requests, allow on-device fallback.
+    "degraded": ControlMode(name="degraded", t_estimator="pctl:90",
+                            hedge="outage", degraded=True,
+                            on_device_fallback=True),
+    # Conservative stationary variant (slow-reacting estimator).
+    "cautious": ControlMode(name="cautious", t_estimator="pctl:75",
+                            degraded=False),
+}
+
+
+def mode_names() -> List[str]:
+    return sorted(CONTROL_MODES)
+
+
+def make_mode(spec: Union[str, ControlMode]) -> ControlMode:
+    """Resolve a control-mode spec (a `CONTROL_MODES` name or an
+    already-built `ControlMode`)."""
+    if isinstance(spec, ControlMode):
+        return spec
+    if not isinstance(spec, str) or spec not in CONTROL_MODES:
+        raise ValueError(f"unknown control mode {spec!r}; known: "
+                         f"{', '.join(mode_names())}")
+    return CONTROL_MODES[spec]
+
+
 # Name -> factory(arg, **options). `arg` is the text after ":" in specs
 # like "static:<model>"; options are the shared policy knobs.
 POLICY_REGISTRY: Dict[str, Callable[..., Policy]] = {

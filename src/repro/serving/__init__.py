@@ -8,6 +8,10 @@ owns the profile store, cold/warm zoo state, and per-model queues, and
 resolves its selection policy by name from the `core.selection`
 registry. See DESIGN.md §2–3."""
 
+from repro.serving.control import (AdaptiveController, ControlDecision,
+                                   ControlPlane, CusumDetector,
+                                   PageHinkleyDetector, make_controller,
+                                   make_detector)
 from repro.serving.fleet import (DeviceProfile, EstimatorBank,
                                  FleetMixture, make_fleet)
 from repro.serving.network import (MarkovProcess, NetworkProcess,
@@ -24,4 +28,6 @@ __all__ = ["Router", "RouteDecision", "NetworkProcess",
            "TInputEstimator", "make_network", "make_estimator",
            "DeviceProfile", "FleetMixture", "EstimatorBank", "make_fleet",
            "Trace", "TraceRecorder", "CapturedTraceProcess",
-           "load_capture", "requests_from_trace"]
+           "load_capture", "requests_from_trace", "ControlPlane",
+           "ControlDecision", "AdaptiveController", "CusumDetector",
+           "PageHinkleyDetector", "make_controller", "make_detector"]

@@ -45,7 +45,8 @@ import numpy as np
 from repro.configs.paper_zoo import (DEVICE_TIERS, DEVICES, FLEET_SCENARIOS,
                                      TABLE5)
 from repro.serving.network import (NetworkProcess, TInputEstimator,
-                                   make_estimator, make_network)
+                                   make_estimator, make_network,
+                                   validate_estimator_spec)
 
 # Table 4 reports on-device means without spread; mobile execution jitter
 # is modeled as a fixed coefficient of variation around them.
@@ -233,6 +234,16 @@ class EstimatorBank:
                  default_prior: Optional[float] = None, lag: int = 0):
         if isinstance(spec, EstimatorBank):
             raise ValueError("cannot nest EstimatorBanks")
+        if isinstance(spec, str):
+            # Parse-check eagerly: the bank resolves specs lazily (one
+            # estimator per device, on first use), so a bad spec would
+            # otherwise surface mid-run as an opaque builder error
+            # instead of a registry-style ValueError at construction.
+            validate_estimator_spec(spec)
+        elif not isinstance(spec, TInputEstimator):
+            raise ValueError(f"EstimatorBank spec must be a "
+                             f"TInputEstimator or a str, got "
+                             f"{type(spec).__name__}")
         if lag < 0:
             raise ValueError(f"lag must be >= 0, got {lag}")
         if lag > 0 and (spec == "observed"
@@ -252,6 +263,12 @@ class EstimatorBank:
 
     def keys(self):
         return list(self._estimators)
+
+    def prior_for(self, key) -> Optional[float]:
+        """The cold-start prior `key`'s estimator is (or would be)
+        primed with — the device's long-run mean, the control plane's
+        degradation reference."""
+        return self.priors.get(key, self.default_prior)
 
     def estimator_for(self, key) -> TInputEstimator:
         est = self._estimators.get(key)

@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.core.selection import ModelProfile
 from repro.serving.batching import ContinuousBatcher, Request
+from repro.serving.control import ControlPlane
 from repro.serving.engine import InferenceEngine
 from repro.serving.router import Router
 
@@ -27,12 +28,13 @@ from repro.serving.router import Router
 class LoopMetrics:
     records: List[dict] = field(default_factory=list)
 
-    def add(self, req: Request, model: str, queue_ms: float, exec_ms: float):
+    def add(self, req: Request, model: str, queue_ms: float,
+            exec_ms: float, mode: Optional[str] = None):
         e2e = 2 * req.t_input_ms + queue_ms + exec_ms
         self.records.append({
             "rid": req.rid, "model": model, "queue_ms": queue_ms,
             "exec_ms": exec_ms, "e2e_ms": e2e,
-            "device": req.device_id,
+            "device": req.device_id, "mode": mode or "static",
             "ok": (e2e <= req.sla_ms) if req.sla_ms else True,
         })
 
@@ -50,18 +52,28 @@ class LoopMetrics:
             "p95_e2e_ms": float(np.percentile(e, 95)),
         }
 
-    def per_device(self) -> Dict[str, dict]:
-        """Attainment / queue split by issuing device (fleet traces)."""
+    def _group_by(self, field_name: str) -> Dict[str, dict]:
+        """Shared group-by-attainment aggregation over the records."""
         out: Dict[str, dict] = {}
-        for dev in sorted({r["device"] or "<none>" for r in self.records}):
+        for key in sorted({r[field_name] or "<none>"
+                           for r in self.records}):
             rs = [r for r in self.records
-                  if (r["device"] or "<none>") == dev]
-            out[dev] = {
+                  if (r[field_name] or "<none>") == key]
+            out[key] = {
                 "served": len(rs),
                 "attainment": float(np.mean([r["ok"] for r in rs])),
                 "mean_e2e_ms": float(np.mean([r["e2e_ms"] for r in rs])),
             }
         return out
+
+    def per_device(self) -> Dict[str, dict]:
+        """Attainment / queue split by issuing device (fleet traces)."""
+        return self._group_by("device")
+
+    def per_mode(self) -> Dict[str, dict]:
+        """Attainment split by governing control mode (controller runs;
+        one 'static' bucket otherwise)."""
+        return self._group_by("mode")
 
 
 class ServingLoop:
@@ -76,7 +88,7 @@ class ServingLoop:
     def __init__(self, engines: Dict[str, InferenceEngine],
                  profiles: Optional[List[ModelProfile]] = None,
                  t_threshold: float = 30.0, seed: int = 0,
-                 policy="cnnselect", t_estimator=None):
+                 policy="cnnselect", t_estimator=None, controller=None):
         self.engines = engines
         some = next(iter(engines.values()))
         self.batchers = {
@@ -86,6 +98,7 @@ class ServingLoop:
         if profiles is None or len(engines) == 1:
             # Single-engine loop: no selection, everything to one queue.
             self.router = None
+            self.control = None
         else:
             # t_estimator: budget-side T_input source (DESIGN.md §9) —
             # None trusts each request's observed upload time; an
@@ -96,7 +109,16 @@ class ServingLoop:
                                  t_estimator=t_estimator)
             for name in self.router.order:
                 self.router.attach_queue(name, self.batchers[name])
+            # The shared per-request control step (DESIGN.md §12):
+            # with a `controller` (CONTROLLER_SCENARIOS name or
+            # AdaptiveController) admission adapts per request; without
+            # one, admission stays the vectorized submit_many path.
+            self.control = ControlPlane(self.router,
+                                        controller=controller,
+                                        seed=seed,
+                                        t_threshold=t_threshold)
         self.metrics = LoopMetrics()
+        self._req_modes: Dict[int, str] = {}
         # Optional trace capture (serving/trace.py, DESIGN.md §11):
         # `run` records each drained request with its SLA outcome.
         # Attach here, not to self.router — the router hook would
@@ -109,9 +131,20 @@ class ServingLoop:
             only = next(iter(self.engines))
             for req in ordered:
                 self.batchers[only].submit(req)
-        else:
+        elif self.control.controller is None:
             # Vectorized admission: one chunked jit call for the trace.
             self.router.submit_many(ordered)
+        else:
+            # Adaptive admission: the shared per-request control step
+            # (detect -> maybe switch mode -> estimate -> select), one
+            # request at a time in arrival order — the controller's
+            # decisions are inherently sequential.
+            for req in ordered:
+                d = self.control.step(req.sla_ms or 1e9,
+                                      req.t_input_ms,
+                                      device_id=req.device_id)
+                self._req_modes[req.rid] = d.mode
+                self.router.enqueue(req, d.name)
         now = 0.0
         # Drain each model's queue in arrival order (virtual clock per
         # model; engines measure real exec time on this host).
@@ -139,7 +172,8 @@ class ServingLoop:
                 now += exec_ms
                 for r in group:
                     queue_ms = max(0.0, r.start_exec - r.arrival)
-                    self.metrics.add(r, name, queue_ms, exec_ms)
+                    self.metrics.add(r, name, queue_ms, exec_ms,
+                                     mode=self._req_modes.get(r.rid))
                     if self.recorder is not None:
                         # sla_ms=0 means "no SLA": the outcome is
                         # unknown, not met (metrics report ok=True for

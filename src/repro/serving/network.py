@@ -568,6 +568,40 @@ ESTIMATOR_REGISTRY = {
         q=float(arg) if arg else 90.0, prior=prior),
 }
 
+# The ":<arg>"-taking estimator heads (numeric argument).
+_ESTIMATOR_ARG_HEADS = ("ewma", "pctl")
+
+
+def estimator_names() -> List[str]:
+    """The spec forms `make_estimator` resolves (registry-error text)."""
+    return ["observed", "mean", "ewma[:alpha]", "pctl[:q]"]
+
+
+def validate_estimator_spec(spec: str) -> str:
+    """Parse-check a string estimator spec, raising the registry-style
+    `ValueError` (naming every valid spec form) on an unknown head, a
+    stray ':<arg>', or a non-numeric argument — previously a bad
+    argument surfaced as whatever the builder raised (an opaque
+    `float()` conversion error), and `EstimatorBank` deferred even that
+    to the first per-device use mid-run. Returns the head."""
+    head, _, arg = spec.partition(":")
+    if head not in ESTIMATOR_REGISTRY:
+        raise ValueError(f"unknown t_input estimator {spec!r}; known: "
+                         f"{', '.join(estimator_names())}")
+    if arg and head not in _ESTIMATOR_ARG_HEADS:
+        raise ValueError(f"t_input estimator {head!r} takes no "
+                         f"':{arg}' argument; known: "
+                         f"{', '.join(estimator_names())}")
+    if arg:
+        try:
+            float(arg)
+        except ValueError:
+            raise ValueError(
+                f"t_input estimator {head!r} takes a numeric argument, "
+                f"got {spec!r}; known: "
+                f"{', '.join(estimator_names())}") from None
+    return head
+
 
 def make_estimator(spec: Union[str, TInputEstimator, None], *,
                    prior: Optional[float] = None
@@ -576,10 +610,12 @@ def make_estimator(spec: Union[str, TInputEstimator, None], *,
     "pctl[:q]", an instance, or None -> None)."""
     if spec is None or isinstance(spec, TInputEstimator):
         return spec
+    if not isinstance(spec, str):
+        raise ValueError(f"t_input estimator spec must be a "
+                         f"TInputEstimator, a str, or None, got "
+                         f"{type(spec).__name__}")
     head, _, arg = spec.partition(":")
-    if head not in ESTIMATOR_REGISTRY:
-        raise ValueError(f"unknown t_input estimator {spec!r}; known: "
-                         f"{', '.join(ESTIMATOR_REGISTRY)}")
+    validate_estimator_spec(spec)
     if head == "mean" and prior is None:
         # Fail at construction: a prior-less "mean" spec can never
         # answer. Callers without a network mean (Router, ServingLoop,

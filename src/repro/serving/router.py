@@ -185,14 +185,21 @@ class Router:
             self.current_profiles(), np.asarray(t_sla, np.float64),
             t_input, realized=realized, detail=detail)
 
+    def enqueue(self, req, name: str) -> None:
+        """Admission bookkeeping for an already-routed request — bind
+        the model, queue it, record the admission. One copy shared by
+        `submit`/`submit_many` and the control plane's adaptive
+        admission path (serving/control.py)."""
+        req.model = name
+        self.queues[name].submit(req)
+        if self.recorder is not None:
+            self.recorder.record_request(req, model=name)
+
     def submit(self, req, *, now: float = 0.0) -> RouteDecision:
         """Route one request and enqueue it on its model's queue."""
         d = self.route(req.sla_ms or 1e9, req.t_input_ms, now=now,
                        device_id=getattr(req, "device_id", None))
-        req.model = d.name
-        self.queues[d.name].submit(req)
-        if self.recorder is not None:
-            self.recorder.record_request(req, model=d.name)
+        self.enqueue(req, d.name)
         return d
 
     def submit_many(self, requests: Sequence) -> List[str]:
@@ -208,9 +215,6 @@ class Router:
         names = []
         for r, i in zip(requests, idx):
             name = self.order[int(i)]
-            r.model = name
-            self.queues[name].submit(r)
-            if self.recorder is not None:
-                self.recorder.record_request(r, model=name)
+            self.enqueue(r, name)
             names.append(name)
         return names

@@ -1,11 +1,16 @@
 """The CNNSelect-fronted multi-model server (paper §5 end-to-end system).
 
 Manages a zoo of real engines (small models on CPU here; pod-sharded on
-the TPU target) and serves each request batch-of-one: estimate the
-remaining budget from the observed upload time, ask the admission
-`Router` (which owns the profile store and the policy object resolved
-from the registry) for a model, execute, and record SLA attainment +
-the measured latency back through the router."""
+the TPU target) and serves each request batch-of-one through the shared
+per-request control step (`serving/control.py`, DESIGN.md §12):
+estimate the remaining budget from the observed upload time, select a
+model, execute, and record SLA attainment + the measured latency back
+through the plane. With a `controller`, the server detects per-device
+regime shifts online and switches its operating mode live — a
+degraded-mode request whose device can serve locally is answered with
+an on-device advisory (the MDInference duality at the prototype layer:
+the server instructs the device to run its local model instead of
+executing in the cloud)."""
 
 from __future__ import annotations
 
@@ -17,6 +22,7 @@ import numpy as np
 
 from repro.core.selection import ModelProfile, Policy
 from repro.serving.batching import Request
+from repro.serving.control import ControlPlane
 from repro.serving.engine import InferenceEngine
 from repro.serving.router import Router
 
@@ -39,6 +45,10 @@ class ServerMetrics:
     # device_id -> [served, violations] (fleet traffic; "<none>" for
     # untagged requests).
     by_device: dict = field(default_factory=dict)
+    # mode name -> served count (online control; "static" when no
+    # controller is attached).
+    by_mode: dict = field(default_factory=dict)
+    fallbacks: int = 0         # on-device advisories issued
 
     @property
     def attainment(self) -> float:
@@ -63,6 +73,9 @@ class ServerMetrics:
             out["by_device"] = {
                 d: {"served": n, "attainment": 1.0 - v / max(n, 1)}
                 for d, (n, v) in sorted(self.by_device.items())}
+        if set(self.by_mode) - {"static"}:
+            out["by_mode"] = dict(sorted(self.by_mode.items()))
+            out["fallbacks"] = self.fallbacks
         return out
 
 
@@ -70,7 +83,8 @@ class CNNSelectServer:
     def __init__(self, models: List[ServedModel], *, t_threshold: float,
                  policy="cnnselect", seed: int = 0,
                  n_tokens: int = 8, stage2_variant: str = "figure",
-                 t_estimator=None):
+                 t_estimator=None, controller=None,
+                 on_device_ms: Optional[Dict[str, float]] = None):
         self.models = {m.name: m for m in models}
         self.order = [m.name for m in models]
         self.n_tokens = n_tokens
@@ -82,6 +96,15 @@ class CNNSelectServer:
             self.router.register(ModelProfile(
                 name=m.name, accuracy=m.accuracy, mu=0.0, sigma=0.0,
                 size_bytes=m.size_bytes))
+        # The shared per-request control step (DESIGN.md §12).
+        # `controller` is a CONTROLLER_SCENARIOS name or an
+        # AdaptiveController; `on_device_ms` maps device ids to their
+        # local-model latency (enables on-device advisories when a
+        # degraded-mode device's cloud path cannot meet the SLA).
+        self.control = ControlPlane(self.router, controller=controller,
+                                    seed=seed, t_threshold=t_threshold,
+                                    stage2_variant=stage2_variant)
+        self.on_device_ms = dict(on_device_ms or {})
         self.metrics = ServerMetrics()
         # Optional trace capture (serving/trace.py, DESIGN.md §11):
         # `handle` records each served request, outcome included.
@@ -110,23 +133,48 @@ class CNNSelectServer:
 
     def select(self, t_sla: float, t_input: float,
                device_id: Optional[str] = None) -> str:
-        """Budget from the observed upload time via the router's
-        estimator (identity when none is attached; keyed per device
-        when the estimator is an `EstimatorBank`), then select."""
-        return self.order[self.router.select(
-            t_sla, self.router.observe_t_input(t_input, device_id))]
+        """One control step (estimate → maybe adapt → select) through
+        the shared plane; the static plane is exactly the pre-plane
+        behaviour — budget from the observed upload time via the
+        router's estimator, then select."""
+        return self.control.step(t_sla, t_input,
+                                 device_id=device_id).name
 
     def handle(self, req: Request, t_sla: float) -> dict:
         """Serve one request batch-of-one style (the prototype evaluation
         path, Fig 12). Returns the per-request record."""
-        name = self.select(t_sla, req.t_input_ms, req.device_id)
+        d = self.control.step(
+            t_sla, req.t_input_ms, device_id=req.device_id,
+            on_device_ms=self.on_device_ms.get(req.device_id or "", 0.0))
+        self.metrics.by_mode[d.mode] = \
+            self.metrics.by_mode.get(d.mode, 0) + 1
+        if d.fallback:
+            # On-device advisory: the device serves locally; no upload,
+            # no cloud execution. Charged the device's known local
+            # latency.
+            e2e = self.on_device_ms[req.device_id or ""]
+            ok = e2e <= t_sla
+            self.metrics.served += 1
+            self.metrics.violations += int(not ok)
+            self.metrics.latencies_ms.append(e2e)
+            self.metrics.fallbacks += 1
+            self.metrics.selections[d.name] = \
+                self.metrics.selections.get(d.name, 0) + 1
+            self.metrics.record_device(req.device_id, ok)
+            if self.recorder is not None:
+                self.recorder.record_request(req, model=d.name,
+                                             sla_ok=ok)
+            return {"model": d.name, "e2e_ms": e2e, "ok": ok,
+                    "device": req.device_id, "mode": d.mode,
+                    "tokens": []}
+        name = d.name
         m = self.models[name]
         t0 = time.perf_counter()
         B = m.engine.batch_size
         prompts = np.tile(req.prompt[None, :], (B, 1)).astype(np.int32)
         toks = m.engine.generate(prompts, self.n_tokens)
         exec_ms = (time.perf_counter() - t0) * 1000.0
-        self.router.record(name, exec_ms)
+        self.control.observe_outcome(name, exec_ms)
         e2e = req.t_input_ms * 2.0 + exec_ms
         ok = e2e <= t_sla
         self.metrics.served += 1
@@ -139,4 +187,5 @@ class CNNSelectServer:
             self.recorder.record_request(req, model=name, sla_ok=ok,
                                          exec_ms=exec_ms)
         return {"model": name, "e2e_ms": e2e, "ok": ok,
-                "device": req.device_id, "tokens": toks[0].tolist()}
+                "device": req.device_id, "mode": d.mode,
+                "tokens": toks[0].tolist()}

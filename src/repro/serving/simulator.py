@@ -36,14 +36,13 @@ from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core.selection import (ModelProfile, Policy,
-                                  on_device_fallback_decision)
+from repro.core.selection import ModelProfile, Policy
+from repro.serving.control import (HEDGE_MODES, AdaptiveController,
+                                   ControlPlane, make_controller)
 from repro.serving.fleet import EstimatorBank, FleetMixture, make_fleet
 from repro.serving.network import (NetworkProcess, TInputEstimator,
                                    make_estimator, make_network)
 from repro.serving.router import Router
-
-HEDGE_MODES = ("none", "p95", "outage")
 
 
 @dataclass
@@ -63,7 +62,8 @@ class SimConfig:
     arrival_rate_hz: float = 0.0   # 0 = closed loop (no queueing)
     n_servers: int = 1
     # Hedging/fallback policy: "none" | "p95" | "outage" (see module
-    # docstring). The legacy boolean `hedge_at_p95=True` maps to "p95".
+    # docstring). The legacy boolean `hedge_at_p95=True` maps to "p95"
+    # and is deprecated (pinned DeprecationWarning).
     hedge: str = "none"
     hedge_at_p95: bool = False
     # A device estimate is "degraded" when it exceeds this factor times
@@ -94,6 +94,15 @@ class SimConfig:
     # fleet trace — the pre-fleet budgeting strawman, kept as an
     # ablation for benchmarks.
     estimator_scope: str = "device"
+    # Online adaptation (serving/control.py, DESIGN.md §12): a
+    # CONTROLLER_SCENARIOS name or a prebuilt `AdaptiveController` that
+    # detects per-device regime shifts (change-point tests over the
+    # monitor estimator's residuals) and switches budgeting policy /
+    # hedge mode / estimator live from its mode table. None (default)
+    # keeps the static configuration above — the golden-pinned path.
+    # With a controller, `t_estimator`/`hedge` above configure nothing:
+    # the active mode's table entries govern each request.
+    controller: Union[str, AdaptiveController, None] = None
 
 
 @dataclass
@@ -119,6 +128,12 @@ class SimResult:
     # upload times and arrival clock of this run.
     t_inputs: Optional[np.ndarray] = None      # (N,) ms
     arrivals: Optional[np.ndarray] = None      # (N,) ms
+    # Online control (SimConfig.controller, DESIGN.md §12): the mode
+    # governing each request plus the controller's switch events
+    # (persisted by `Trace.from_sim` as meta["control_events"]).
+    modes: Optional[np.ndarray] = None         # (N,) int64 mode index
+    mode_names: Optional[Sequence[str]] = None
+    switch_events: Optional[List[dict]] = None
 
     def selection_histogram(self, names: Sequence[str]) -> Dict[str, float]:
         cloud = self.selections[self.selections >= 0]
@@ -129,6 +144,31 @@ class SimResult:
             out["<on-device>"] = n_fb / len(self.selections)
         return out
 
+    def _group_stats(self, index: np.ndarray, names: Sequence[str],
+                     extras: Sequence = ()) -> Dict[str, Dict[str, float]]:
+        """The one group-by-attainment aggregation behind
+        `per_regime` / `per_device` / `per_mode`: bucket requests by an
+        (N,) integer index, report share / attainment / mean latency
+        (+ accuracy when recorded) per named bucket. `extras` adds
+        ``(label, (N,) array)`` mean columns; a None array is skipped."""
+        out: Dict[str, Dict[str, float]] = {}
+        for k, name in enumerate(names):
+            mask = index == k
+            if not mask.any():
+                continue
+            d = {
+                "share": float(mask.mean()),
+                "attainment": float(1.0 - self.violations[mask].mean()),
+                "mean_latency": float(self.latencies[mask].mean()),
+            }
+            if self.accuracies is not None:
+                d["accuracy"] = float(self.accuracies[mask].mean())
+            for label, arr in extras:
+                if arr is not None:
+                    d[label] = float(np.asarray(arr)[mask].mean())
+            out[name] = d
+        return out
+
     def per_regime(self) -> Dict[str, Dict[str, float]]:
         """Attainment / accuracy / latency split by network regime
         (time-varying processes; one bucket for stationary runs; fleet
@@ -137,19 +177,7 @@ class SimResult:
             return {}
         names = self.regime_names or [
             f"regime{k}" for k in range(int(self.regimes.max()) + 1)]
-        out: Dict[str, Dict[str, float]] = {}
-        for k, name in enumerate(names):
-            mask = self.regimes == k
-            if not mask.any():
-                continue
-            out[name] = {
-                "share": float(mask.mean()),
-                "attainment": float(1.0 - self.violations[mask].mean()),
-                "mean_latency": float(self.latencies[mask].mean()),
-            }
-            if self.accuracies is not None:
-                out[name]["accuracy"] = float(self.accuracies[mask].mean())
-        return out
+        return self._group_stats(self.regimes, names)
 
     def per_device(self) -> Dict[str, Dict[str, float]]:
         """Attainment / accuracy / latency / fallback share split by
@@ -158,24 +186,24 @@ class SimResult:
             return {}
         names = self.device_ids or [
             f"device{d}" for d in range(int(self.device_index.max()) + 1)]
-        out: Dict[str, Dict[str, float]] = {}
-        for d, name in enumerate(names):
-            mask = self.device_index == d
-            if not mask.any():
-                continue
-            out[name] = {
-                "share": float(mask.mean()),
-                "attainment": float(1.0 - self.violations[mask].mean()),
-                "mean_latency": float(self.latencies[mask].mean()),
-                "fallback_share": float(
-                    (self.selections[mask] < 0).mean()),
-            }
-            if self.accuracies is not None:
-                out[name]["accuracy"] = float(self.accuracies[mask].mean())
-            if self.degraded is not None:
-                out[name]["degraded_share"] = float(
-                    self.degraded[mask].mean())
-        return out
+        return self._group_stats(
+            self.device_index, names,
+            extras=(("fallback_share", self.selections < 0),
+                    ("degraded_share", self.degraded)))
+
+    def per_mode(self) -> Dict[str, Dict[str, float]]:
+        """Attainment split by governing controller mode (adaptive
+        runs — SimConfig.controller; empty for static runs). The
+        `share` column is the fraction of the run's requests served
+        under each mode, `fallback_share` the on-device share."""
+        if self.modes is None:
+            return {}
+        names = self.mode_names or [
+            f"mode{k}" for k in range(int(self.modes.max()) + 1)]
+        return self._group_stats(
+            self.modes, names,
+            extras=(("fallback_share", self.selections < 0),
+                    ("degraded_share", self.degraded)))
 
 
 def _hedge_mode(cfg: SimConfig) -> str:
@@ -184,6 +212,11 @@ def _hedge_mode(cfg: SimConfig) -> str:
         raise ValueError(f"unknown hedge mode {mode!r}; known: "
                          f"{', '.join(HEDGE_MODES)}")
     if cfg.hedge_at_p95:                 # legacy boolean knob
+        import warnings
+        warnings.warn(
+            "SimConfig.hedge_at_p95 is deprecated; use hedge='p95' "
+            "instead (the boolean maps to exactly that mode)",
+            DeprecationWarning, stacklevel=3)
         if mode not in ("none", "p95"):
             raise ValueError("hedge_at_p95=True conflicts with "
                              f"hedge={mode!r}; set one of them")
@@ -249,6 +282,20 @@ def simulate(profiles: Sequence[ModelProfile], cfg: SimConfig, *,
     zoo = router.zoo
     if cfg.prewarm:
         router.prewarm()
+    # The per-request control step — estimate, (adapt,) select, hedge,
+    # fall back — lives in the shared ControlPlane (DESIGN.md §12).
+    # A prebuilt controller instance is deep-copied: simulate() must
+    # never mutate a caller's controller (plan reuse across runs).
+    ctrl = make_controller(cfg.controller)
+    if ctrl is not None and ctrl is cfg.controller:
+        ctrl = copy.deepcopy(ctrl)
+    plane = ControlPlane(
+        router, hedge=hedge, outage_factor=cfg.outage_factor,
+        on_device_fallback=cfg.on_device_fallback, controller=ctrl,
+        priors=fleet.priors() if fleet is not None else {},
+        default_prior=fleet.mean if fleet is not None else net.mean,
+        lag=cfg.estimator_lag, seed=policy_seed,
+        t_threshold=cfg.t_threshold, stage2_variant=cfg.stage2_variant)
 
     N = cfg.n_requests
     if fleet is None:
@@ -287,42 +334,31 @@ def simulate(profiles: Sequence[ModelProfile], cfg: SimConfig, *,
         arrivals = np.zeros(N)
     server_free = np.zeros(cfg.n_servers)
 
-    # Vectorized admission: the entire trace in chunked select_batch
-    # calls. Profiles are static within a run, so batching the policy up
-    # front is equivalent to asking it per event. The budget-side
-    # estimates are materialized first (router state advances exactly
-    # once per observation) so the outage detector can read them.
+    # The whole trace's control plan (serving/control.py): vectorized
+    # admission — estimates materialized first (router state advances
+    # exactly once per observation), then chunked select_batch calls —
+    # plus the outage/fallback masks and, with a controller, the
+    # per-request modes and switch events. Static configs follow the
+    # golden-pinned pre-extraction sequence exactly.
     if cfg.estimator_scope not in ("device", "global"):
         raise ValueError(f"unknown estimator_scope "
                          f"{cfg.estimator_scope!r}; known: device, global")
-    est_keys = device_keys if cfg.estimator_scope == "device" else None
-    t_est = router.estimate_series(t_inputs, device_ids=est_keys)
-    sel = np.asarray(router.route_batch(
-        np.full(N, cfg.t_sla), t_est, realized=exec_samples,
-        estimated=True), np.int64)
-
-    # Outage detection + on-device fallback (hedge="outage" only): a
-    # device is in a degraded regime when its estimate has risen past
-    # `outage_factor` x its own prior mean; it serves locally when the
-    # estimated cloud path cannot meet the SLA but the device can.
-    degraded = fb_mask = None
-    od_latency = od_accuracy = None
-    if hedge == "outage":
-        degraded = t_est > cfg.outage_factor * prior_mean
-        if fleet is not None and cfg.on_device_fallback:
-            od_ms = np.array([d.on_device_ms
-                              for d in fleet.devices])[device_index]
-            od_sg = np.array([d.on_device_sigma
-                              for d in fleet.devices])[device_index]
-            od_acc = np.array([d.on_device_accuracy
-                               for d in fleet.devices])[device_index]
-            fastest_mu = min(p.mu for p in profiles)
-            fb_mask = degraded & on_device_fallback_decision(
-                cfg.t_sla, t_est, fastest_mu, od_ms)
-            od_latency = np.maximum(
-                rng.normal(od_ms, od_sg + 1e-9),
-                0.1 * np.maximum(od_ms, 1e-9))
-            od_accuracy = od_acc
+    on_device = None
+    if fleet is not None:
+        on_device = (
+            np.array([d.on_device_ms for d in fleet.devices])[device_index],
+            np.array([d.on_device_sigma
+                      for d in fleet.devices])[device_index],
+            np.array([d.on_device_accuracy
+                      for d in fleet.devices])[device_index])
+    plan = plane.plan_batch(rng, cfg.t_sla, t_inputs,
+                            device_keys=device_keys,
+                            realized=exec_samples,
+                            prior_mean=prior_mean, on_device=on_device,
+                            estimator_scope=cfg.estimator_scope)
+    sel = plan.sel
+    degraded, fb_mask = plan.degraded, plan.fb_mask
+    od_latency, od_accuracy = plan.od_latency, plan.od_accuracy
 
     lat = np.zeros(N)
     hedges = fallbacks = 0
@@ -345,8 +381,8 @@ def simulate(profiles: Sequence[ModelProfile], cfg: SimConfig, *,
             start = max(now + ti, server_free[s])
             queue_wait = start - (now + ti)
             do_hedge = cfg.n_servers > 1 and (
-                (hedge == "p95" and queue_wait > 0.05 * cfg.t_sla)
-                or (hedge == "outage" and degraded[i]))
+                (plan.p95_gate[i] and queue_wait > 0.05 * cfg.t_sla)
+                or plan.outage_gate[i])
             if do_hedge:
                 # Hedge: re-issue to the next server (straggler
                 # mitigation); counted once per request whether or not
@@ -386,6 +422,9 @@ def simulate(profiles: Sequence[ModelProfile], cfg: SimConfig, *,
         device_ids=device_ids,
         t_inputs=t_inputs,
         arrivals=arrivals,
+        modes=plan.modes,
+        mode_names=plan.mode_names,
+        switch_events=plan.events or None,
     )
 
 

@@ -193,6 +193,18 @@ class Trace:
                    else np.zeros(n, np.int64))
         rnames = (list(result.regime_names) if result.regime_names
                   else ["live"])
+        meta = dict(meta or {})
+        if getattr(result, "switch_events", None):
+            # Online-control adaptations (DESIGN.md §12): the
+            # controller's mode-switch events ride in the capture, so a
+            # replay can verify it reproduces the same adaptation
+            # sequence (and analysis can line switches up with the
+            # recorded regimes).
+            meta.setdefault("control_events",
+                            [dict(e) for e in result.switch_events])
+            if result.mode_names is not None:
+                meta.setdefault("control_modes",
+                                list(result.mode_names))
         return cls(
             t_arrival=result.arrivals, device_id=dev,
             t_input_ms=result.t_inputs, regime_id=regimes,
@@ -200,7 +212,7 @@ class Trace:
             sla_ok=np.where(result.violations, SLA_MISS, SLA_MET).astype(
                 np.int8),
             regime_names=rnames, name=name, source="simulator",
-            meta=dict(meta or {}))
+            meta=meta)
 
     # -- codecs -------------------------------------------------------------
 

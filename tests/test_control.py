@@ -1,0 +1,376 @@
+"""Online control plane (serving/control.py, DESIGN.md §12):
+change-point detectors, the adaptive controller, and the shared
+per-request control step. Deterministic unit pins; the calibration
+properties (false-positive rate / bounded detection delay) live in
+tests/test_properties.py."""
+
+import copy
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_zoo import paper_profiles
+from repro.core.selection import (CONTROL_MODES, ControlMode, make_mode,
+                                  mode_names)
+from repro.serving.control import (AdaptiveController, ControlPlane,
+                                   CusumDetector, PageHinkleyDetector,
+                                   make_controller, make_detector)
+from repro.serving.fleet import EstimatorBank
+from repro.serving.router import Router
+from repro.serving.simulator import SimConfig, simulate
+from repro.serving.trace import CapturedTraceProcess, Trace
+
+
+# -- detectors --------------------------------------------------------------
+
+def test_cusum_alarm_position_pinned():
+    """Fixed scale=1, k=0.5, h=8: a +3-sigma step accumulates 2.5 per
+    update, so the alarm fires on exactly the 4th shifted sample."""
+    det = CusumDetector(threshold=8.0, drift=0.5, scale=1.0)
+    for _ in range(20):
+        assert det.update(0.0) == 0
+    hits = [det.update(3.0) for _ in range(4)]
+    assert hits == [0, 0, 0, 1]
+    assert det.statistic == 0.0          # self-reset after the alarm
+
+
+def test_cusum_down_alarm_and_sign():
+    det = CusumDetector(threshold=8.0, drift=0.5, scale=1.0)
+    hits = [det.update(-3.0) for _ in range(4)]
+    assert hits == [0, 0, 0, -1]
+
+
+def test_cusum_no_alarm_below_drift():
+    """A sustained offset smaller than the drift never accumulates."""
+    det = CusumDetector(threshold=8.0, drift=0.5, scale=1.0)
+    assert all(det.update(0.4) == 0 for _ in range(10000))
+
+
+def test_page_hinkley_alarm_positions():
+    """delta=0.25, h=8: a +1.25 step adds 1.0 to the up side per
+    update -> alarm on the 9th shifted sample; and a zero-mean stream
+    never alarms (each side carries its own drift — a shared sum would
+    walk away from its extremum and false-alarm)."""
+    det = PageHinkleyDetector(threshold=8.0, delta=0.25, scale=1.0)
+    for _ in range(5000):
+        assert det.update(0.0) == 0
+    hits = [det.update(1.25) for _ in range(9)]
+    assert hits == [0] * 8 + [1]
+    hits = [det.update(-1.25) for _ in range(9)]
+    assert hits == [0] * 8 + [-1]
+
+
+def test_detector_scale_priming_and_self_normalization():
+    det = CusumDetector(threshold=8.0, drift=0.5)
+    det.prime_scale(10.0)
+    # Residual 30 = 3 sigma at the primed scale: alarm on 4th sample.
+    hits = [det.update(30.0) for _ in range(4)]
+    assert hits[-1] == 1
+    fixed = CusumDetector(threshold=8.0, drift=0.5, scale=5.0)
+    fixed.prime_scale(50.0)              # no-op with a fixed scale
+    assert fixed.fixed_scale == 5.0
+
+
+def test_make_detector_registry_errors():
+    assert isinstance(make_detector("cusum"), CusumDetector)
+    assert isinstance(make_detector("ph:12"), PageHinkleyDetector)
+    assert make_detector("cusum:5").threshold == 5.0
+    with pytest.raises(ValueError, match="known: cusum"):
+        make_detector("ewma")
+    with pytest.raises(ValueError, match="numeric"):
+        make_detector("cusum:high")
+    with pytest.raises(ValueError, match="ChangePointDetector"):
+        make_detector(7)
+    with pytest.raises(ValueError):
+        CusumDetector(threshold=-1)
+    with pytest.raises(ValueError):
+        PageHinkleyDetector(delta=-0.1)
+
+
+# -- mode table -------------------------------------------------------------
+
+def test_mode_registry():
+    assert set(mode_names()) >= {"stationary", "degraded"}
+    m = make_mode("degraded")
+    assert m.degraded and m.hedge == "outage" and m.on_device_fallback
+    assert make_mode(m) is m
+    with pytest.raises(ValueError, match="known:"):
+        make_mode("panic")
+    with pytest.raises(ValueError):
+        make_mode(3.5)
+
+
+def test_controller_validation_errors():
+    with pytest.raises(ValueError, match="at least two"):
+        AdaptiveController(modes=("stationary",))
+    with pytest.raises(ValueError, match="duplicate"):
+        AdaptiveController(modes=("stationary", "stationary"))
+    with pytest.raises(ValueError, match="hedge"):
+        AdaptiveController(modes=(
+            "stationary", ControlMode(name="x", hedge="always")))
+    with pytest.raises(ValueError, match="estimator"):
+        AdaptiveController(modes=(
+            "stationary", ControlMode(name="x", t_estimator="kalman")))
+    with pytest.raises(ValueError, match="start"):
+        AdaptiveController(start=5)
+    with pytest.raises(ValueError, match="cooldown"):
+        AdaptiveController(cooldown=-1)
+    with pytest.raises(ValueError, match="known:"):
+        make_controller("zen")
+    with pytest.raises(ValueError, match="AdaptiveController"):
+        make_controller(1.5)
+    named = make_controller("reactive")
+    assert named.name == "reactive"
+    assert named.mode_names() == ["stationary", "degraded"]
+    assert make_controller(named) is named
+    assert make_controller(None) is None
+
+
+def test_controller_detects_step_and_recovery():
+    """60ms traffic -> sustained 300ms -> back to 60ms: escalate on the
+    shift, de-escalate on the recovery, events recorded in order."""
+    ctrl = AdaptiveController(detector="cusum:8", monitor="ewma:0.2",
+                              cooldown=4)
+    ctrl.prime({}, 60.0)
+    stream = [60.0] * 40 + [300.0] * 40 + [60.0] * 40
+    modes = [ctrl.observe("dev", x).name for x in stream]
+    assert modes[:40] == ["stationary"] * 40
+    assert "degraded" in modes[40:60]     # bounded escalation delay
+    assert modes[79] == "degraded"
+    assert modes[-1] == "stationary"      # recovered
+    ev = ctrl.events
+    assert [e["to"] for e in ev[:2]] == ["degraded", "stationary"]
+    assert ev[0]["alarm"] == 1 and ev[1]["alarm"] == -1
+    assert 40 <= ev[0]["request"] < 60
+    assert ev[0]["device"] == "dev"
+
+
+def test_controller_scalar_matches_run_series():
+    """The scalar observe() protocol and the vectorized run_series()
+    walk identical detector state: same modes, same events."""
+    rng = np.random.default_rng(0)
+    stream = np.concatenate([
+        rng.normal(60, 8, 60).clip(1), rng.normal(250, 30, 60).clip(1),
+        rng.normal(60, 8, 60).clip(1)])
+    keys = list(np.where(np.arange(180) % 2 == 0, "a", "b"))
+    a = AdaptiveController(cooldown=4)
+    a.prime({"a": 60.0, "b": 60.0}, 60.0)
+    scalar = [a.modes.index(a.observe(k, float(x)))
+              for k, x in zip(keys, stream)]
+    b = AdaptiveController(cooldown=4)
+    b.prime({"a": 60.0, "b": 60.0}, 60.0)
+    series = b.run_series(stream, keys)
+    assert np.array_equal(np.asarray(scalar), series)
+    # Event floats (ref/level) may differ in the last ulp: the EWMA's
+    # estimate_series uses the blocked closed form (documented
+    # round-off vs the sequential protocol). Decisions must agree
+    # exactly.
+    assert len(a.events) == len(b.events)
+    for ea, eb in zip(a.events, b.events):
+        assert {k: v for k, v in ea.items()
+                if k not in ("ref", "level")} == \
+            {k: v for k, v in eb.items() if k not in ("ref", "level")}
+        assert ea["ref"] == pytest.approx(eb["ref"], rel=1e-9)
+        assert ea["level"] == pytest.approx(eb["level"], rel=1e-9)
+
+
+def test_controller_per_device_isolation():
+    """One device's outage cannot switch another device's mode."""
+    ctrl = AdaptiveController(cooldown=4)
+    ctrl.prime({"good": 60.0, "bad": 60.0}, 60.0)
+    for _ in range(50):
+        ctrl.observe("bad", 400.0)
+        ctrl.observe("good", 60.0)
+    assert ctrl.mode_of("bad").name == "degraded"
+    assert ctrl.mode_of("good").name == "stationary"
+    assert all(e["device"] == "bad" for e in ctrl.events)
+
+
+# -- control plane ----------------------------------------------------------
+
+def _profiles():
+    return paper_profiles(["mobilenetv1_05", "mobilenetv1_10",
+                           "inceptionv3"])
+
+
+def test_static_plane_step_matches_router_flow():
+    """ControlPlane.step with no controller must be exactly the old
+    observe_t_input -> select sequence (the server's pre-plane path)."""
+    profs = _profiles()
+    plane_router = Router(profs, policy="greedy_nw",
+                          t_estimator="ewma:0.2")
+    plane = ControlPlane(plane_router)
+    mirror = Router(profs, policy="greedy_nw", t_estimator="ewma:0.2")
+    rng = np.random.default_rng(1)
+    for t_input in rng.lognormal(4.0, 0.4, 50):
+        d = plane.step(300.0, float(t_input))
+        est = mirror.observe_t_input(float(t_input))
+        assert d.index == mirror.select(300.0, est)
+        assert d.t_est == est
+        assert d.mode == "static" and not d.fallback
+
+
+def test_plane_step_adaptive_decisions():
+    """Degraded-regime decisions: conservative estimator, hedge flag,
+    and on-device fallback when the cloud path cannot meet the SLA."""
+    profs = _profiles()
+    plane = ControlPlane(Router(profs, policy="greedy_nw"),
+                         controller=AdaptiveController(cooldown=2),
+                         priors={"dev": 60.0}, default_prior=60.0)
+    for _ in range(40):
+        d = plane.step(300.0, 60.0, device_id="dev")
+    assert d.mode == "stationary" and not d.hedge
+    for _ in range(40):
+        d = plane.step(300.0, 400.0, device_id="dev",
+                       on_device_ms=150.0)
+    # 2*400ms upload + fastest mu >> 300ms SLA; device does 150ms.
+    assert d.mode == "degraded"
+    assert d.fallback and d.index == -1 and d.name == "<on-device>"
+    d2 = plane.step(300.0, 400.0, device_id="dev")   # no local model
+    assert not d2.fallback and d2.hedge and d2.degraded
+
+
+def test_simulate_adaptive_deterministic_and_counts():
+    profs = paper_profiles()
+    cfg = SimConfig(t_sla=320.0, n_requests=800, seed=3,
+                    network="wifi_lte_handoff", controller="reactive")
+    a = simulate(profs, cfg)
+    b = simulate(profs, cfg)
+    assert np.array_equal(a.selections, b.selections)
+    assert np.array_equal(a.modes, b.modes)
+    assert a.switch_events == b.switch_events
+    assert a.mode_names == ["stationary", "degraded"]
+    assert len(a.modes) == 800
+    pm = a.per_mode()
+    assert pm and sum(v["share"] for v in pm.values()) == pytest.approx(1.0)
+
+
+def test_simulate_does_not_mutate_caller_controller():
+    profs = paper_profiles()
+    ctrl = AdaptiveController(cooldown=4)
+    cfg = SimConfig(t_sla=320.0, n_requests=300, seed=3,
+                    network="wifi_lte_handoff", controller=ctrl)
+    a = simulate(profs, cfg)
+    assert ctrl._n_seen == 0 and not ctrl.events
+    b = simulate(profs, cfg)                  # reusable config
+    assert np.array_equal(a.selections, b.selections)
+
+
+def test_static_run_has_no_modes():
+    r = simulate(paper_profiles(), SimConfig(t_sla=320.0,
+                                             n_requests=100, seed=0))
+    assert r.modes is None and r.switch_events is None
+    assert r.per_mode() == {}
+
+
+def test_switch_events_ride_in_capture_and_replay_identically():
+    """Trace.from_sim persists the adaptation sequence; replaying the
+    capture bit-for-bit through the same controller preset reproduces
+    the identical switches — the adaptation is a function of the
+    recorded upload-time stream (and its long-run mean prior) alone,
+    independent of the policy/execution RNG (hence the different
+    seed)."""
+    profs = paper_profiles()
+    # A recorded workload (any source); the adaptive run is captured
+    # over it, then the capture itself is replayed.
+    workload = Trace.from_sim(
+        simulate(profs, SimConfig(t_sla=320.0, n_requests=600, seed=3,
+                                  network="wifi_lte_handoff",
+                                  policy="greedy_nw")),
+        name="workload", meta={"models": [p.name for p in profs]})
+    cap_run = simulate(profs, SimConfig(
+        t_sla=320.0, n_requests=600, seed=3,
+        network=CapturedTraceProcess(workload, mode="exact"),
+        controller="reactive"))
+    assert cap_run.switch_events
+    trace = Trace.from_sim(cap_run, name="ctl",
+                           meta={"models": [p.name for p in profs]})
+    assert trace.meta["control_events"] == cap_run.switch_events
+    assert trace.meta["control_modes"] == ["stationary", "degraded"]
+    replay = simulate(profs, SimConfig(
+        t_sla=320.0, n_requests=600, seed=99,
+        network=CapturedTraceProcess(trace, mode="exact"),
+        controller="reactive"))
+    assert replay.switch_events == cap_run.switch_events
+    assert np.array_equal(replay.modes, cap_run.modes)
+
+
+def test_per_mode_buckets_follow_mode_index():
+    r = simulate(paper_profiles(), SimConfig(
+        t_sla=350.0, n_requests=600, seed=5, fleet="lte_outage_fleet",
+        controller="reactive"))
+    pm = r.per_mode()
+    for k, name in enumerate(r.mode_names):
+        mask = r.modes == k
+        if not mask.any():
+            assert name not in pm
+            continue
+        assert pm[name]["share"] == pytest.approx(mask.mean())
+        assert pm[name]["attainment"] == pytest.approx(
+            1.0 - r.violations[mask].mean())
+
+
+def test_plane_preserves_caller_primed_controller():
+    """A controller the caller already primed with device priors (the
+    server/loop path, where the plane has no fleet info) must keep
+    them — the plane only re-primes when it has priors of its own."""
+    ctrl = AdaptiveController(detector="cusum:20")
+    ctrl.prime({"phone": 60.0}, 60.0)
+    plane = ControlPlane(Router(_profiles(), policy="greedy_nw"),
+                         controller=ctrl)
+    assert ctrl._priors == {"phone": 60.0}
+    assert ctrl._default_prior == 60.0
+    rng = np.random.default_rng(2)
+    for x in rng.normal(60.0, 12.0, 15):
+        d = plane.step(260.0, float(max(x, 1.0)), device_id="phone")
+    assert d.mode == "stationary"
+    # The stationary mode's per-request outage valve works off those
+    # priors: one moderate hopeless spike (est > 2x prior; cloud path
+    # 2*130 + fastest mu > 260ms SLA; device serves in 150ms) draws an
+    # on-device advisory without any regime switch.
+    d = plane.step(260.0, 130.0, device_id="phone", on_device_ms=150.0)
+    assert d.mode == "stationary" and d.degraded and d.fallback
+
+
+# -- satellites -------------------------------------------------------------
+
+def test_hedge_at_p95_emits_pinned_deprecation():
+    profs = paper_profiles()
+    cfg = SimConfig(t_sla=300.0, n_requests=20, seed=0,
+                    hedge_at_p95=True)
+    with pytest.warns(DeprecationWarning, match="hedge_at_p95"):
+        simulate(profs, cfg)
+
+
+def test_router_invalid_estimator_spec_registry_error():
+    """Satellite: a bad estimator spec through Router.__init__ raises
+    the registry-style ValueError naming the valid spec forms (it used
+    to surface as an opaque float() conversion error)."""
+    profs = _profiles()
+    with pytest.raises(ValueError, match=r"known: observed, mean, "
+                                         r"ewma\[:alpha\], pctl\[:q\]"):
+        Router(profs, t_estimator="ewma:fast")
+    with pytest.raises(ValueError, match="known: observed"):
+        Router(profs, t_estimator="kalman")
+    with pytest.raises(ValueError, match="takes no"):
+        Router(profs, t_estimator="observed:1")
+    with pytest.raises(ValueError, match="TInputEstimator"):
+        Router(profs, t_estimator=3.5)
+
+
+def test_estimator_bank_validates_spec_eagerly():
+    """The bank resolves estimators lazily per device; a bad spec must
+    still fail at construction, not mid-run on first use."""
+    with pytest.raises(ValueError, match="numeric"):
+        EstimatorBank("pctl:high")
+    with pytest.raises(ValueError, match="known: observed"):
+        EstimatorBank("kalman")
+    with pytest.raises(ValueError, match="TInputEstimator"):
+        EstimatorBank(42)
+
+
+def test_control_modes_registry_is_frozen_dataclass():
+    m = CONTROL_MODES["degraded"]
+    with pytest.raises(Exception):
+        m.hedge = "none"
+    assert copy.deepcopy(m) == m

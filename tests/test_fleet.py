@@ -255,7 +255,8 @@ def test_hedge_knob_validation():
     with pytest.raises(ValueError):
         simulate(paper_profiles(), SimConfig(t_sla=300.0, n_requests=10,
                                              hedge="sometimes"))
-    with pytest.raises(ValueError):
+    with pytest.warns(DeprecationWarning, match="hedge_at_p95"), \
+            pytest.raises(ValueError):
         simulate(paper_profiles(), SimConfig(t_sla=300.0, n_requests=10,
                                              hedge="outage",
                                              hedge_at_p95=True))

@@ -113,7 +113,47 @@ def test_server_handles_request_end_to_end(server):
                   t_input_ms=5.0)
     rec = server.handle(req, t_sla=10_000.0)
     assert rec["model"] in ("tiny", "small")
+    assert rec["mode"] == "static"
     assert len(rec["tokens"]) == 4
     assert server.metrics.served == 1
     s = server.metrics.summary()
     assert 0.0 <= s["attainment"] <= 1.0
+    assert "by_mode" not in s           # static plane: no mode column
+
+
+def test_server_adaptive_controller_issues_on_device_advisory(server):
+    """The server drives the shared control plane (DESIGN.md §12):
+    sustained degradation escalates the device's mode, and a degraded
+    request whose estimated cloud path cannot meet the SLA while the
+    device can serve locally is answered with an on-device advisory
+    (no cloud execution)."""
+    from repro.serving.control import ControlPlane
+
+    saved_control, saved_metrics = server.control, server.metrics
+    saved_od = server.on_device_ms
+    try:
+        server.control = ControlPlane(server.router,
+                                      controller="reactive")
+        server.on_device_ms = {"phone": 150.0}
+        server.metrics = type(server.metrics)()
+        rng = np.random.default_rng(0)
+        prompt = np.arange(8, dtype=np.int32) % 50
+        # Warm stationary traffic, then a sustained collapse: uploads
+        # so slow that 2*T_input alone blows the SLA.
+        recs = []
+        for i in range(40):
+            t_in = 5.0 if i < 20 else 500.0
+            recs.append(server.handle(
+                Request(arrival=float(i), rid=i, prompt=prompt,
+                        t_input_ms=t_in, device_id="phone"),
+                t_sla=400.0))
+        modes = [r["mode"] for r in recs]
+        assert modes[0] == "stationary" and modes[-1] == "degraded"
+        advisories = [r for r in recs if r["model"] == "<on-device>"]
+        assert advisories and advisories[-1]["ok"]   # 150ms <= 400ms
+        s = server.metrics.summary()
+        assert s["by_mode"]["degraded"] >= 1
+        assert s["fallbacks"] == len(advisories)
+    finally:
+        server.control, server.metrics = saved_control, saved_metrics
+        server.on_device_ms = saved_od

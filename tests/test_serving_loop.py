@@ -76,6 +76,32 @@ def test_loop_routes_with_cnnselect():
     assert set(by_model.get("fast", [])) >= {0, 1, 2}
 
 
+def test_loop_adaptive_controller_switches_modes():
+    """The loop drives the shared control plane (DESIGN.md §12): with a
+    controller attached, a device whose uploads degrade mid-trace is
+    escalated live and the per-mode breakdown reports both modes."""
+    engines = {"fast": _engine(seed=0), "slow": _engine(seed=1)}
+    profiles = [ModelProfile("fast", accuracy=0.5, mu=5.0, sigma=1.0),
+                ModelProfile("slow", accuracy=0.9, mu=400.0, sigma=10.0)]
+    loop = ServingLoop(engines, profiles=profiles, t_threshold=20.0,
+                       controller="reactive")
+    rng = np.random.default_rng(3)
+    reqs = []
+    for i in range(60):
+        t_in = 20.0 if i < 30 else 400.0   # mid-trace degradation
+        reqs.append(Request(arrival=float(i * 5), rid=i,
+                            prompt=rng.integers(0, 50, 6).astype(np.int32),
+                            max_new_tokens=2, sla_ms=5000.0,
+                            t_input_ms=t_in, device_id="phone"))
+    metrics = loop.run(reqs)
+    assert metrics.summary()["served"] == 60
+    pm = metrics.per_mode()
+    assert set(pm) == {"stationary", "degraded"}
+    assert pm["stationary"]["served"] + pm["degraded"]["served"] == 60
+    assert loop.control.controller.events
+    assert loop.control.controller.events[0]["to"] == "degraded"
+
+
 def test_loop_recorder_captures_run(loop):
     """The ServingLoop recorder hook (DESIGN.md §11): every drained
     request lands in the trace with its outcome and measured exec."""

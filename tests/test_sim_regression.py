@@ -74,7 +74,10 @@ def test_legacy_hedge_at_p95_maps_to_p95_mode():
     profs = paper_profiles()
     kw = dict(t_sla=SLA_MS, n_requests=300, seed=SEED,
               arrival_rate_hz=30.0, n_servers=2)
-    legacy = simulate(profs, SimConfig(**kw, hedge_at_p95=True))
+    # The legacy boolean now carries a pinned DeprecationWarning
+    # (mirroring NetworkModel.estimate_t_input, PR 3).
+    with pytest.warns(DeprecationWarning, match="hedge_at_p95"):
+        legacy = simulate(profs, SimConfig(**kw, hedge_at_p95=True))
     mode = simulate(profs, SimConfig(**kw, hedge="p95"))
     assert np.array_equal(legacy.latencies, mode.latencies)
     assert legacy.hedges == mode.hedges > 0

@@ -102,7 +102,7 @@ def test_hedging_reduces_tail():
                                      arrival_rate_hz=50.0, n_servers=4))
     hedged = simulate(profs, SimConfig(t_sla=400, n_requests=800, seed=0,
                                        arrival_rate_hz=50.0, n_servers=4,
-                                       hedge_at_p95=True))
+                                       hedge="p95"))
     assert hedged.p95_latency <= base.p95_latency + 1e-6
 
 
