@@ -1,0 +1,144 @@
+"""Engine scaling: the python reference loop vs the jit `lax.scan`
+column program (serving/scan_engine.py, DESIGN.md §13).
+
+Sweeps fleet sizes through both engines on the same workload — an
+`ArrayFleet` of paper Table 4 tiers driving the PR 5 adaptive control
+plane (per-device "reactive" controller: EWMA monitor, CUSUM detector,
+stationary/degraded mode table) with outage-aware fallback and
+greedy_nw selection — and reports end-to-end requests/sec for full
+`simulate()` calls (trace sampling, control plan, event phase,
+metrics).
+
+Measurement: each scan point runs once un-timed to warm the jit cache
+for its exact (rows, devices) shape — compile time is a one-off, not a
+throughput cost — then reports the median of `repeats` timed runs.
+The python engine needs no warmup and its cost is linear in N at fixed
+D, so smaller draws of the same workload give its honest rate where a
+full-size run would take hours; the acceptance sweep (`--full`) runs
+it at the full 1M requests so the 100k-device speedup is measured on
+literally identical workloads.  The 1M-device x 10M-request point runs
+the scan engine only.
+
+Rows: ``engine.<engine>.d<devices>`` with requests/sec, plus
+``engine.speedup.d<devices>`` where both engines ran (the acceptance
+gate: >= 50x at 100k devices).
+
+Trajectory artifact: full runs append a point to
+``benchmarks/results/BENCH_engine_scale.json`` (requests/sec per
+size), the perf series CI tracks across main pushes from this PR on.
+
+Smoke (CI): ``python benchmarks/engine_scale.py --smoke``.
+Full (acceptance): ``python benchmarks/engine_scale.py --full``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import time
+
+from benchmarks.common import RESULTS_DIR, emit, row
+
+T_SLA = 350.0
+SEED = 11
+
+# (devices, python-engine requests, scan-engine requests).
+SWEEP_SMOKE = [(1_000, 20_000, 20_000)]
+SWEEP_RUN = [(1_000, 50_000, 50_000), (100_000, 50_000, 1_000_000)]
+SWEEP_FULL = [(1_000, 100_000, 100_000), (100_000, 1_000_000, 1_000_000),
+              (1_000_000, None, 10_000_000)]
+
+
+def _sim(devices: int, n_requests: int, engine: str, shards: int):
+    from repro.configs.paper_zoo import paper_profiles
+    from repro.serving.fleet import ArrayFleet
+    from repro.serving.simulator import SimConfig, simulate
+
+    cfg = SimConfig(
+        t_sla=T_SLA, n_requests=n_requests, seed=SEED,
+        fleet=ArrayFleet(devices, seed=SEED), policy="greedy_nw",
+        controller="reactive", engine=engine,
+        shards=shards if engine == "scan" else 1)
+    t0 = time.perf_counter()
+    res = simulate(paper_profiles(), cfg)
+    dt = time.perf_counter() - t0
+    return dt, res
+
+
+def bench(sweep, shards: int = 1, trajectory: bool = False):
+    rows = []
+    points = []
+    for devices, n_py, n_scan in sweep:
+        rates = {}
+        for engine, n in (("python", n_py), ("scan", n_scan)):
+            if n is None:
+                continue
+            if engine == "scan":
+                _sim(devices, n, engine, shards)       # warm this shape
+                repeats = 2 if devices >= 1_000_000 else 3
+                runs = [_sim(devices, n, engine, shards)
+                        for _ in range(repeats)]
+                dt = statistics.median(d for d, _ in runs)
+                res = runs[-1][1]
+            else:
+                dt, res = _sim(devices, n, engine, shards)
+            rates[engine] = n / dt
+            rows.append(row(f"engine.{engine}.d{devices}", dt * 1e6,
+                            {"devices": devices, "requests": n,
+                             "reqs_per_s": f"{n / dt:.0f}",
+                             "attainment": f"{res.attainment:.4f}"}))
+            points.append({"devices": devices, "requests": n,
+                           "engine": engine,
+                           "reqs_per_s": round(n / dt, 1)})
+        if len(rates) == 2:
+            rows.append(row(f"engine.speedup.d{devices}", 0.0,
+                            {"devices": devices,
+                             "x": f"{rates['scan'] / rates['python']:.1f}"}))
+    if trajectory:
+        path = os.path.join(RESULTS_DIR, "BENCH_engine_scale.json")
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        series = []
+        if os.path.exists(path):
+            series = json.load(open(path)).get("series", [])
+        series.append({"unix_time": int(time.time()),
+                       "shards": shards, "points": points})
+        with open(path, "w") as f:
+            json.dump({"bench": "engine_scale", "series": series}, f,
+                      indent=2, sort_keys=True)
+        rows.append(row("engine.trajectory", 0.0, {"path": path}))
+    return rows
+
+
+def run():
+    """benchmarks.run entry: moderate sizes (CI artifact job)."""
+    return bench(SWEEP_RUN)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes (CI fast-job smoke)")
+    ap.add_argument("--full", action="store_true",
+                    help="acceptance sizes incl. 1M devices x 10M "
+                         "requests, and append the BENCH_*.json "
+                         "trajectory point")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="shard the scan program's device axis "
+                         "(needs host devices; see "
+                         "repro.utils.config.configure)")
+    args = ap.parse_args()
+    if args.shards > 1:
+        from benchmarks.common import configure_host
+        configure_host(host_devices=args.shards)
+    sweep = (SWEEP_SMOKE if args.smoke
+             else SWEEP_FULL if args.full else SWEEP_RUN)
+    print("name,us_per_call,derived")
+    emit(bench(sweep, shards=args.shards, trajectory=args.full))
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    main()

@@ -9,6 +9,10 @@ probabilistic exploration -> convergence on the most accurate model.
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.utils.config import configure
+
+configure(platform="cpu")  # pin before anything builds jax arrays
+
 import numpy as np
 
 from repro.configs.paper_zoo import paper_profiles

@@ -12,6 +12,10 @@ SLA — reproducing the Fig 12 transition between models.
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.utils.config import configure
+
+configure(platform="cpu")  # pin before anything builds jax arrays
+
 import argparse
 import dataclasses
 

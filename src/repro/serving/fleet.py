@@ -43,10 +43,10 @@ from typing import Dict, List, Optional, Sequence, Union
 import numpy as np
 
 from repro.configs.paper_zoo import (DEVICE_TIERS, DEVICES, FLEET_SCENARIOS,
-                                     TABLE5)
-from repro.serving.network import (NetworkProcess, TInputEstimator,
-                                   make_estimator, make_network,
-                                   validate_estimator_spec)
+                                     TABLE5, lognormal_params)
+from repro.serving.network import (MIN_T_INPUT_MS, NetworkProcess,
+                                   TInputEstimator, estimator_factory,
+                                   make_network)
 
 # Table 4 reports on-device means without spread; mobile execution jitter
 # is modeled as a fixed coefficient of variation around them.
@@ -82,10 +82,16 @@ class FleetTrace:
     regime: np.ndarray                 # (N,) int64, global regime ids
     device_index: np.ndarray           # (N,) int64, index into the fleet
     regime_names: List[str]
-    device_ids: List[str]
+    # Per-device id strings, or None when devices are identified by
+    # their integer index alone (ArrayFleet populations — materializing
+    # a million id strings would dwarf the trace itself).
+    device_ids: Optional[List[str]] = None
 
     def device_keys(self) -> np.ndarray:
-        """(N,) object array of device_id strings (estimator-bank keys)."""
+        """(N,) estimator-bank keys: device_id strings when the fleet
+        names its devices, the integer device indices otherwise."""
+        if self.device_ids is None:
+            return self.device_index
         return np.asarray(self.device_ids, object)[self.device_index]
 
 
@@ -133,6 +139,21 @@ class FleetMixture:
         cold-start priors (what offline measurement would give)."""
         return {d.device_id: p.mean
                 for d, p in zip(self.devices, self.processes)}
+
+    def prior_array(self) -> np.ndarray:
+        """`priors()` in device-index order — the (D,) array form the
+        scan engine (and the simulator's per-request gather) consume."""
+        return np.array([p.mean for p in self.processes], np.float64)
+
+    def on_device_arrays(self):
+        """``(od_ms, od_sigma, od_accuracy)`` each (D,) in device-index
+        order — the fallback profiles as arrays."""
+        return (np.array([d.on_device_ms for d in self.devices],
+                         np.float64),
+                np.array([d.on_device_sigma for d in self.devices],
+                         np.float64),
+                np.array([d.on_device_accuracy for d in self.devices],
+                         np.float64))
 
     def regime_names(self) -> List[str]:
         return [f"{d.device_id}:{rn}"
@@ -204,6 +225,90 @@ class FleetMixture:
                           self.regime_names(), list(self.device_ids))
 
 
+class ArrayFleet:
+    """Vectorized fleet for million-device populations (DESIGN.md §13).
+
+    `FleetMixture` models a handful of *tiers* faithfully (independent
+    child RNG streams, regime-switching radios) but draws each device's
+    subsequence in a python loop — O(D) overhead that dominates at
+    10^5+ devices. `ArrayFleet` trades radio fidelity for scale: every
+    device sits on a *stationary* lognormal radio whose mean is its
+    tier's long-run mean perturbed by a per-device lognormal jitter
+    (devices within a tier are heterogeneous, so per-device estimation
+    stays meaningful), and a whole trace is one vectorized lognormal
+    draw. Devices are identified by their integer index; the fleet
+    protocol (`prior_array` / `on_device_arrays` / `sample_trace` /
+    `priors` / `mean`) matches `FleetMixture`, so both engines accept
+    either class. Tier membership is deterministic (contiguous blocks
+    proportional to `tier_weights`); the per-device jitter is fixed by
+    `seed` at construction, so two fleets built with the same arguments
+    are identical."""
+
+    def __init__(self, n_devices: int, *,
+                 tiers: Sequence[str] = ("flagship", "midrange",
+                                         "budget"),
+                 tier_weights: Optional[Sequence[float]] = None,
+                 cv: float = 0.4, mean_jitter: float = 0.15,
+                 seed: int = 0, name: str = "array_fleet"):
+        if n_devices < 1:
+            raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+        if cv <= 0 or mean_jitter < 0:
+            raise ValueError("cv must be > 0 and mean_jitter >= 0")
+        self.name = name
+        self.n_devices = D = int(n_devices)
+        self.tier_names = [str(t) for t in tiers]
+        profs = [device_tier_profile(t) for t in self.tier_names]
+        tier_mean = np.array([make_network(p.network).mean for p in profs])
+        w = np.ones(len(profs)) if tier_weights is None else np.asarray(
+            tier_weights, np.float64)
+        if len(w) != len(profs) or (w <= 0).any():
+            raise ValueError("tier_weights must be positive, one per tier")
+        # Deterministic contiguous tier blocks, sized proportionally
+        # (every tier gets at least one device when D allows).
+        bounds = np.round(np.cumsum(w) / w.sum() * D).astype(np.int64)
+        counts = np.diff(np.concatenate([[0], bounds]))
+        self.tier_of = np.repeat(np.arange(len(profs)), counts)
+        # Per-device radio: the tier mean times a unit-median lognormal
+        # jitter, with the tier-level coefficient of variation.
+        jit = np.random.default_rng(seed).lognormal(
+            0.0, mean_jitter, D) if mean_jitter > 0 else np.ones(D)
+        self.device_mean = tier_mean[self.tier_of] * jit
+        self._mu, self._sigma = lognormal_params(
+            self.device_mean, cv * self.device_mean)
+        self._od = (
+            np.array([p.on_device_ms for p in profs])[self.tier_of],
+            np.array([p.on_device_sigma for p in profs])[self.tier_of],
+            np.array([p.on_device_accuracy for p in profs])[self.tier_of])
+
+    @property
+    def mean(self) -> float:
+        """Fleet-wide long-run mean T_input (devices equally likely)."""
+        return float(self.device_mean.mean())
+
+    def prior_array(self) -> np.ndarray:
+        return self.device_mean.copy()
+
+    def on_device_arrays(self):
+        return self._od
+
+    def priors(self) -> Dict[int, float]:
+        """Dict form of `prior_array` (python-engine bank priors).
+        O(D) — the scan engine uses `prior_array` directly."""
+        return dict(enumerate(self.device_mean))
+
+    def regime_names(self) -> List[str]:
+        return list(self.tier_names)
+
+    def sample_trace(self, rng: np.random.Generator,
+                     n: int = 1) -> FleetTrace:
+        n = int(n)
+        dev = rng.integers(0, self.n_devices, size=n)
+        t = np.maximum(rng.lognormal(self._mu[dev], self._sigma[dev]),
+                       MIN_T_INPUT_MS)
+        return FleetTrace(t, self.tier_of[dev], dev.astype(np.int64),
+                          self.regime_names(), device_ids=None)
+
+
 # --------------------------------------------------------------------------
 # Per-device keyed estimation (the TInputEstimator bank)
 # --------------------------------------------------------------------------
@@ -235,15 +340,19 @@ class EstimatorBank:
         if isinstance(spec, EstimatorBank):
             raise ValueError("cannot nest EstimatorBanks")
         if isinstance(spec, str):
-            # Parse-check eagerly: the bank resolves specs lazily (one
-            # estimator per device, on first use), so a bad spec would
-            # otherwise surface mid-run as an opaque builder error
-            # instead of a registry-style ValueError at construction.
-            validate_estimator_spec(spec)
+            # Parse ONCE: the bank instantiates estimators lazily (one
+            # per device, on first use), and routing each cold start
+            # back through the spec-string parser costs real time at
+            # fleet scale. The factory closes over the parsed spec and
+            # also front-loads the registry-style ValueError a bad spec
+            # would otherwise raise mid-run.
+            self._factory = estimator_factory(spec)
         elif not isinstance(spec, TInputEstimator):
             raise ValueError(f"EstimatorBank spec must be a "
                              f"TInputEstimator or a str, got "
                              f"{type(spec).__name__}")
+        else:
+            self._factory = None
         if lag < 0:
             raise ValueError(f"lag must be >= 0, got {lag}")
         if lag > 0 and (spec == "observed"
@@ -274,12 +383,12 @@ class EstimatorBank:
         est = self._estimators.get(key)
         if est is None:
             prior = self.priors.get(key, self.default_prior)
-            if isinstance(self.spec, TInputEstimator):
+            if self._factory is not None:
+                est = self._factory(prior=prior)
+            else:
                 est = copy.deepcopy(self.spec)
                 if est.prior is None:
                     est.prior = prior
-            else:
-                est = make_estimator(self.spec, prior=prior)
             if self.lag > 0 and est.prior is None:
                 raise ValueError(
                     f"EstimatorBank(lag={self.lag}) needs a prior for "
@@ -379,12 +488,13 @@ def device_tier_profile(tier: str, *, device_id: Optional[str] = None,
         on_device_accuracy=od_acc, tier=tier)
 
 
-def make_fleet(spec: Union[str, FleetMixture, None]
-               ) -> Optional[FleetMixture]:
-    """Resolve a fleet spec: a `FleetMixture` passes through, a string
-    names a `configs/paper_zoo.FLEET_SCENARIOS` entry, None -> None
-    (single shared process — the pre-fleet default path)."""
-    if spec is None or isinstance(spec, FleetMixture):
+def make_fleet(spec: Union[str, FleetMixture, "ArrayFleet", None]
+               ) -> Union[FleetMixture, "ArrayFleet", None]:
+    """Resolve a fleet spec: a `FleetMixture` or `ArrayFleet` passes
+    through, a string names a `configs/paper_zoo.FLEET_SCENARIOS`
+    entry, None -> None (single shared process — the pre-fleet default
+    path)."""
+    if spec is None or isinstance(spec, (FleetMixture, ArrayFleet)):
         return spec
     if not isinstance(spec, str):
         raise ValueError(f"fleet spec must be a FleetMixture or a str, "

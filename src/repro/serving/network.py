@@ -603,6 +603,27 @@ def validate_estimator_spec(spec: str) -> str:
     return head
 
 
+def estimator_factory(spec: str):
+    """Parse a string estimator spec ONCE and return a
+    ``factory(prior=...) -> TInputEstimator`` closure. `EstimatorBank`
+    instantiates one estimator per unseen device; routing every cold
+    start through `make_estimator` re-partitioned and re-validated the
+    spec string per device — noise at ten devices, real work at a
+    million. The factory keeps the parsed (head, arg, builder) triple
+    closed over instead."""
+    head, _, arg = spec.partition(":")
+    validate_estimator_spec(spec)
+    builder = ESTIMATOR_REGISTRY[head]
+
+    def factory(prior: Optional[float] = None) -> TInputEstimator:
+        if head == "mean" and prior is None:
+            raise ValueError("t_estimator 'mean' needs a prior; pass a "
+                             "MeanEstimator(prior=...) instance instead")
+        return builder(arg, prior)
+
+    return factory
+
+
 def make_estimator(spec: Union[str, TInputEstimator, None], *,
                    prior: Optional[float] = None
                    ) -> Optional[TInputEstimator]:

@@ -6,6 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.utils.config import configure, host_device_count
+
 DTYPES = {
     "float32": jnp.float32,
     "bfloat16": jnp.bfloat16,

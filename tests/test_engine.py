@@ -1,0 +1,169 @@
+"""Scan-engine equivalence: `engine="scan"` must reproduce the python
+reference loop decision-for-decision (DESIGN.md §13) — selections,
+modes, and switch events exactly; latencies and estimator-derived
+floats to 1e-9 relative.
+
+The matrix covers every registry policy x {static estimator, adaptive
+controller} x {no fleet, mixed_fleet, lte_outage_fleet, ArrayFleet},
+plus the estimator-lag ring, global scope, open-loop queueing, and the
+sharded program (skipped unless the host exposes 2+ XLA devices — set
+REPRO_HOST_DEVICES=2 or more to opt in, as the CI fast job does)."""
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_zoo import paper_profiles
+from repro.core.selection import policy_names
+from repro.serving.fleet import ArrayFleet, EstimatorBank
+from repro.serving.simulator import SimConfig, simulate
+
+N = 900
+T_SLA = 350.0
+
+
+@pytest.fixture(scope="module")
+def profiles():
+    return paper_profiles()
+
+
+def run_both(profiles, **kw):
+    out = {}
+    for engine in ("python", "scan"):
+        cfg = SimConfig(t_sla=T_SLA, n_requests=N, seed=5, engine=engine,
+                        **kw)
+        out[engine] = simulate(profiles, cfg)
+    return out["python"], out["scan"]
+
+
+def assert_equivalent(a, b):
+    assert list(a.selections) == list(b.selections)
+    np.testing.assert_allclose(np.asarray(a.latencies),
+                               np.asarray(b.latencies), rtol=1e-9)
+    assert a.hedges == b.hedges
+    assert a.fallbacks == b.fallbacks
+    assert a.cold_starts == b.cold_starts
+    assert a.attainment == pytest.approx(b.attainment, rel=1e-12)
+    assert a.accuracy == pytest.approx(b.accuracy, rel=1e-9)
+    ma = [] if a.modes is None else list(a.modes)
+    mb = [] if b.modes is None else list(b.modes)
+    assert ma == mb
+    ea = a.switch_events or []
+    eb = b.switch_events or []
+    assert len(ea) == len(eb)
+    for x, y in zip(ea, eb):
+        for k in ("request", "device", "from", "to", "alarm"):
+            assert x[k] == y[k]
+        for k in ("ref", "level"):
+            assert x[k] == pytest.approx(y[k], rel=1e-6)
+
+
+def _policy_kw(name, profiles):
+    return {"policy": f"static:{profiles[0].name}"
+            if name == "static" else name}
+
+
+FLEETS = [None, "mixed_fleet", "lte_outage_fleet"]
+
+
+@pytest.mark.parametrize("fleet", FLEETS,
+                         ids=["nofleet", "mixed", "lte_outage"])
+@pytest.mark.parametrize("policy", policy_names())
+def test_static_plan_matches(profiles, policy, fleet):
+    a, b = run_both(profiles, fleet=fleet, t_estimator="ewma:0.2",
+                    **_policy_kw(policy, profiles))
+    assert_equivalent(a, b)
+
+
+@pytest.mark.parametrize("fleet", FLEETS,
+                         ids=["nofleet", "mixed", "lte_outage"])
+@pytest.mark.parametrize("policy", policy_names())
+def test_controller_plan_matches(profiles, policy, fleet):
+    a, b = run_both(profiles, fleet=fleet, controller="reactive",
+                    **_policy_kw(policy, profiles))
+    assert_equivalent(a, b)
+
+
+@pytest.mark.parametrize("spec", ["observed", "mean", "ewma:0.35",
+                                  "pctl:90", "pctl:50"])
+def test_estimator_kinds_match(profiles, spec):
+    a, b = run_both(profiles, fleet=ArrayFleet(150, seed=2),
+                    policy="greedy_nw", t_estimator=spec)
+    assert_equivalent(a, b)
+
+
+def test_estimator_lag_and_global_scope_match(profiles):
+    a, b = run_both(profiles, fleet="lte_outage_fleet",
+                    policy="cnnselect", t_estimator="pctl:75",
+                    estimator_lag=2)
+    assert_equivalent(a, b)
+    a, b = run_both(profiles, fleet="mixed_fleet", policy="greedy_nw",
+                    t_estimator="ewma:0.2", estimator_scope="global")
+    assert_equivalent(a, b)
+
+
+def test_open_loop_hedging_matches(profiles):
+    a, b = run_both(profiles, fleet="lte_outage_fleet",
+                    controller="reactive", policy="cnnselect",
+                    arrival_rate_hz=500.0, n_servers=2)
+    assert_equivalent(a, b)
+
+
+def test_array_fleet_controller_matches(profiles):
+    a, b = run_both(profiles, fleet=ArrayFleet(200, seed=9),
+                    controller="ph_reactive", policy="greedy_nw")
+    assert_equivalent(a, b)
+    assert (b.switch_events or []) != []      # regime shifts do fire
+
+
+def test_scan_rejects_memory_budget(profiles):
+    cfg = SimConfig(t_sla=T_SLA, n_requests=10, engine="scan",
+                    memory_budget_bytes=1 << 30)
+    with pytest.raises(ValueError, match="memory budget"):
+        simulate(profiles, cfg)
+
+
+def test_unknown_engine_rejected(profiles):
+    cfg = SimConfig(t_sla=T_SLA, n_requests=10, engine="fortran")
+    with pytest.raises(ValueError, match="engine"):
+        simulate(profiles, cfg)
+
+
+def test_sharded_program_bitwise_identical(profiles):
+    import jax
+    if jax.local_device_count() < 2:
+        pytest.skip("needs 2+ XLA host devices "
+                    "(run with REPRO_HOST_DEVICES=2 or more)")
+    out = {}
+    for shards in (1, 2):
+        cfg = SimConfig(t_sla=T_SLA, n_requests=N, seed=5, engine="scan",
+                        fleet=ArrayFleet(150, seed=2),
+                        controller="reactive", policy="greedy_nw",
+                        shards=shards)
+        out[shards] = simulate(profiles, cfg)
+    a, b = out[1], out[2]
+    assert list(a.selections) == list(b.selections)
+    assert np.array_equal(np.asarray(a.latencies),
+                          np.asarray(b.latencies))
+    assert list(a.modes) == list(b.modes)
+    assert (a.switch_events or []) == (b.switch_events or [])
+
+
+def test_estimator_bank_parses_spec_once(monkeypatch):
+    """Regression: the bank must parse its spec string exactly once and
+    stamp per-device estimators from the parsed factory — re-parsing on
+    every cold device is an O(fleet) cost the scan engine exposed."""
+    import repro.serving.fleet as fleet_mod
+    calls = []
+    real = fleet_mod.estimator_factory
+
+    def counting(spec, **kw):
+        calls.append(spec)
+        return real(spec, **kw)
+
+    monkeypatch.setattr(fleet_mod, "estimator_factory", counting)
+    bank = EstimatorBank("ewma:0.3", default_prior=50.0)
+    for key in range(64):
+        bank.observe(key, 10.0 + key)
+        bank.estimate(key)
+    assert calls == ["ewma:0.3"]
+    assert len(bank.keys()) == 64

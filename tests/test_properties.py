@@ -291,3 +291,43 @@ def test_error_feedback_unbiased_accumulation(seed, steps):
     np.testing.assert_allclose(total_true - total_sent, np.asarray(resid),
                                atol=1e-4)
     assert float(np.abs(np.asarray(resid)).max()) < 0.1  # one-step error
+
+
+# -- scan engine vs python engine (from test_engine.py) --------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_devices=st.integers(1, 6),
+    estimator=st.sampled_from(["observed", "ewma:0.4", "pctl:90",
+                               "pctl:50"]),
+    lag=st.integers(0, 2),
+    controller=st.booleans(),
+)
+def test_scan_engine_matches_python_engine(seed, n_devices, estimator,
+                                           lag, controller):
+    """Arbitrary small fleet workloads: the jit lax.scan column program
+    and the python reference loop make identical decisions (DESIGN.md
+    §13)."""
+    from repro.configs.paper_zoo import paper_profiles
+    from repro.serving.fleet import ArrayFleet
+    from repro.serving.simulator import SimConfig, simulate
+
+    kw = ({"controller": "reactive", "estimator_lag": lag}
+          if controller else
+          {"t_estimator": estimator, "estimator_lag": lag})
+    out = {}
+    for engine in ("python", "scan"):
+        cfg = SimConfig(t_sla=350.0, n_requests=48, seed=seed,
+                        fleet=ArrayFleet(n_devices, seed=seed),
+                        policy="greedy_nw", engine=engine, **kw)
+        out[engine] = simulate(paper_profiles(), cfg)
+    a, b = out["python"], out["scan"]
+    assert list(a.selections) == list(b.selections)
+    np.testing.assert_allclose(np.asarray(a.latencies),
+                               np.asarray(b.latencies), rtol=1e-9)
+    ea = a.switch_events or []
+    eb = b.switch_events or []
+    assert [(e["request"], e["device"], e["from"], e["to"])
+            for e in ea] == [(e["request"], e["device"], e["from"],
+                              e["to"]) for e in eb]
