@@ -1,6 +1,10 @@
 """Kernel microbenchmarks: interpret-mode timing is NOT hardware-
 representative — the derived column reports the roofline-relevant
-quantities (FLOPs, bytes, arithmetic intensity) per kernel call."""
+quantities (FLOPs, bytes, arithmetic intensity) per kernel call, plus
+the call's throughput as tokens/s so the kernel rows share an axis with
+the measured serving rows (fig9 `measured.*` / benchmarks
+.measured_serving): flash_attention processes B*T prompt tokens per
+call, decode_attention B tokens, int8_matmul M activation rows."""
 
 from __future__ import annotations
 
@@ -27,7 +31,8 @@ def run():
     bytes_ = 2 * B * T * (H + 2 * KV) * hd * 4
     rows.append(row("kernel.flash_attention", us,
                     {"flops": flops, "bytes": bytes_,
-                     "intensity": f"{flops/bytes_:.1f}"}))
+                     "intensity": f"{flops/bytes_:.1f}",
+                     "tokens_s": f"{B * T * 1e6 / us:.0f}"}))
     # decode attention
     S = 1024
     qd = jnp.asarray(rng.normal(size=(B, 1, H, hd)), jnp.float32)
@@ -42,6 +47,7 @@ def run():
     rows.append(row("kernel.decode_attention", us,
                     {"flops": flops, "bytes": bytes_,
                      "intensity": f"{flops/bytes_:.2f}",
+                     "tokens_s": f"{B * 1e6 / us:.0f}",
                      "note": "memory-bound (reads whole cache)"}))
     # int8 matmul
     M, K, N = 256, 512, 512
@@ -53,5 +59,6 @@ def run():
         block_k=128).block_until_ready(), reps=3)
     rows.append(row("kernel.int8_matmul", us,
                     {"flops": 2 * M * K * N,
-                     "weight_bytes_vs_bf16": f"{K*N}/{K*N*2}"}))
+                     "weight_bytes_vs_bf16": f"{K*N}/{K*N*2}",
+                     "tokens_s": f"{M * 1e6 / us:.0f}"}))
     return rows

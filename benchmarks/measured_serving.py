@@ -1,0 +1,104 @@
+"""Measured serving capacity: tokens/s and SLA attainment from engines
+that actually execute (DESIGN.md §14).
+
+One row per `MEASURED_ZOO` candidate: decode tokens/s and prefill
+latency from `InferenceEngine.measured_profile` (prefill/per-token split),
+SLA attainment of the requests CNNSelect routed to it on a short served
+trace, and whether the candidate sits on the accuracy/latency frontier.
+The int8 variants are the paper-adjacent "Smart at what cost?" story:
+`lm_base_int8` trades quantization error for a bigger model inside the
+storage budget and should hold a frontier slot over its fp32 peers."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row
+
+N_REQUESTS = 48
+SEED = 11
+
+# fig9_server_capacity embeds these rows on its axis; memoize per
+# request count so a full `benchmarks.run` pass (which hits both entry
+# points) builds and profiles the zoo engines only once.
+_cache: dict = {}
+
+
+def _frontier(profiles):
+    """Names NOT dominated in (accuracy up, mu down) by another model."""
+    out = set()
+    for p in profiles:
+        dominated = any(
+            q.accuracy >= p.accuracy and q.mu <= p.mu
+            and (q.accuracy > p.accuracy or q.mu < p.mu)
+            for q in profiles)
+        if not dominated:
+            out.add(p.name)
+    return out
+
+
+def run(n_requests: int = N_REQUESTS):
+    if n_requests in _cache:
+        return _cache[n_requests]
+    from repro.serving.batching import Request
+    from repro.serving.measured import (build_zoo, measured_profiles,
+                                        served_models)
+    from repro.serving.server import CNNSelectServer
+    from repro.serving.trace import TraceRecorder
+
+    zoo = build_zoo(batch_size=2, max_seq=64)
+    detail: dict = {}
+    profs = measured_profiles(zoo, prompt_len=8, n_tokens=4, reps=3,
+                              detail=detail)
+    frontier = _frontier(profs)
+
+    # Serve a short trace so attainment shares the axis with tokens/s.
+    # t_threshold sits on the engines' own mu scale (cnnselect stage 1
+    # needs t_budget - t_threshold above the candidate mus, else every
+    # request falls back to argmin-mu).
+    srv = CNNSelectServer(served_models(zoo), t_threshold=10.0, n_tokens=4)
+    for p in profs:
+        srv.router.set_profile(p.name, p.mu, p.sigma)
+    srv.router.prewarm()
+    rng = np.random.default_rng(SEED)
+    # Upload times sweep 0.5x..2x a campus-wifi-ish mean so the latency
+    # budget left after T_input walks the whole accuracy/mu frontier.
+    t_ins = rng.uniform(6.0, 26.0, n_requests)
+    t_sla = float(2.2 * t_ins.mean()
+                  + 1.1 * max(p.mu for p in profs))
+    with TraceRecorder(name="measured_capacity").attach(srv) as rec:
+        for i in range(n_requests):
+            srv.handle(Request(
+                arrival=float(i), rid=i,
+                prompt=rng.integers(0, 50, 8).astype(np.int32),
+                t_input_ms=float(t_ins[i])), t_sla=t_sla)
+    trace = rec.to_trace(source="server")
+
+    rows = []
+    for p in profs:
+        d = detail[p.name]
+        eng = zoo[p.name].engine
+        toks_s = eng.batch_size * 1000.0 / max(d["per_token_ms"], 1e-9)
+        sel = trace.model == p.name
+        att = (float((trace.sla_ok[sel] == 1).mean())
+               if sel.any() else float("nan"))
+        rows.append(row(
+            f"measured.{p.name}", d["per_token_ms"] * 1e3, {
+                "tokens_s": f"{toks_s:.0f}",
+                "prefill_ms": f"{d['prefill_ms']:.2f}",
+                "mu_ms": f"{p.mu:.2f}",
+                "accuracy": f"{p.accuracy:.3f}",
+                "size_mb": f"{p.size_bytes / 1e6:.2f}",
+                "int8": zoo[p.name].quant == "int8",
+                "frontier": p.name in frontier,
+                "served": int(sel.sum()),
+                "sla_attainment": "n/a" if sel.sum() == 0 else f"{att:.3f}",
+            }))
+    rows.append(row("measured.overall", 0.0, {
+        "n": len(trace), "sla_ms": f"{t_sla:.0f}",
+        "attainment": f"{trace.attainment:.3f}",
+        "int8_on_frontier": bool(
+            {n for n in frontier if zoo[n].quant == "int8"}),
+    }))
+    _cache[n_requests] = rows
+    return rows

@@ -4,7 +4,12 @@ Server tiers -> mesh slices: 1 chip, 4x4 slice, 16x16 pod, 2x16x16
 multi-pod. Per-arch decode-step estimates scale the roofline terms with
 chip count (compute/memory scale 1/n; collective grows with ring size:
 we reuse the measured pod/multipod cells where present and scale
-analytically for the small slices)."""
+analytically for the small slices).
+
+The analytic fig9 rows are joined by `measured.*` rows from the zoo
+engines that actually execute on this host (benchmarks.measured_serving)
+so estimated and measured capacity land on the same tokens/s +
+SLA-attainment axis."""
 
 from __future__ import annotations
 
@@ -43,4 +48,8 @@ def run():
                 f"fig9.{cfg.name}.multipod_2x256", m["step_time_est_s"] * 1e6,
                 {"est_decode_s": f"{m['step_time_est_s']:.4f}",
                  "dominant": m["dominant"]}))
+    # Measured counterpart: tokens/s + SLA attainment from engines that
+    # actually run here, on the same row axis as the estimates above.
+    from benchmarks import measured_serving
+    rows += measured_serving.run()
     return rows

@@ -1,6 +1,6 @@
 """Sim-to-real trace replay (ROADMAP "Trace capture"; DESIGN.md §11).
 
-Three sections, each a capture→persist→replay round trip:
+Four sections, each a capture→persist→replay round trip:
 
 1. **Prototype capture** (``trace_replay.proto.*``) — a real 2-model
    `CNNSelectServer` (tiny + small engines executing on this host)
@@ -12,6 +12,12 @@ Three sections, each a capture→persist→replay round trip:
    (`CapturedTraceProcess(mode="exact")`), and the measured execution
    time of each captured selection injected (`simulate`'s
    ``exec_override``). The row reports the sim-vs-real attainment gap.
+1b. **Measured zoo** (``trace_replay.measured.*``) — the same loop over
+   the runnable `MEASURED_ZOO` engines (fp32 + int8 variants as
+   distinct selection candidates, `serving/measured.py`): measured
+   per-request exec_ms is captured and replayed through
+   ``simulate(exec_override=…)``, pinning sim against *executed*
+   models (DESIGN.md §14; the CI measured-serving smoke).
 2. **Simulator round trip** (``trace_replay.sim.*``) — every registry
    policy (oracle included, which a live server cannot run) on the
    `lte_outages` regime-switching scenario: capture a run with
@@ -132,9 +138,44 @@ def _capture_profiles(trace: Trace, fallback) -> list:
     return out
 
 
-def proto_rows(n_requests: int, policies, tol: float, tmpdir: str):
+def _capture_and_replay(srv, spec, n_requests: int, t_sla: float,
+                        tin_proc, tmpdir: str, label: str):
+    """Serve n_requests through `srv` under policy `spec` while a
+    recorder captures measured exec_ms; round-trip the capture through
+    disk, then replay it through the simulator with the captured T_input
+    sequence (`mode="exact"`) and the measured execution times injected
+    (`exec_override`). Returns (trace, sim_result)."""
     from repro.serving.batching import Request
 
+    srv.metrics = type(srv.metrics)()
+    srv.router.policy = make_policy(spec, t_threshold=30.0, seed=SEED)
+    live_profiles = srv.current_profiles()
+    t_inputs = tin_proc.sample_t_input(
+        np.random.default_rng(SEED), n_requests)
+    rng = np.random.default_rng(SEED + 1)
+    with TraceRecorder(name=f"{label}-{spec}").attach(srv) as rec:
+        for i in range(n_requests):
+            req = Request(
+                arrival=float(i), rid=i,
+                prompt=rng.integers(0, 50, 8).astype(np.int32),
+                t_input_ms=float(t_inputs[i]))
+            srv.handle(req, t_sla=t_sla)
+        trace = rec.to_trace(
+            name=f"{label}-{spec}", source="server",
+            meta={"policy": spec, "t_sla": t_sla,
+                  "models": [p.name for p in live_profiles]})
+    trace = _roundtrip(trace, tmpdir)
+    profs = _capture_profiles(trace, live_profiles)
+    sim = simulate(profs, SimConfig(
+        t_sla=t_sla, n_requests=len(trace),
+        network=CapturedTraceProcess(trace, mode="exact"),
+        policy=make_policy(spec, t_threshold=30.0, seed=SEED),
+        seed=SEED),
+        exec_override=_exec_override(trace, [p.name for p in profs]))
+    return trace, sim
+
+
+def proto_rows(n_requests: int, policies, tol: float, tmpdir: str):
     srv = _build_server()
     live_profiles = srv.current_profiles()
     # Time-varying uploads: the wifi→lte step trace scaled to this
@@ -146,30 +187,8 @@ def proto_rows(n_requests: int, policies, tol: float, tmpdir: str):
     t_sla = float(2.2 * tin_proc.mean + 1.25 * mus["small"])
     rows, failures = [], []
     for spec in policies:
-        srv.metrics = type(srv.metrics)()
-        srv.router.policy = make_policy(spec, t_threshold=30.0, seed=SEED)
-        t_inputs = tin_proc.sample_t_input(
-            np.random.default_rng(SEED), n_requests)
-        rng = np.random.default_rng(SEED + 1)
-        with TraceRecorder(name=f"proto-{spec}").attach(srv) as rec:
-            for i in range(n_requests):
-                req = Request(
-                    arrival=float(i), rid=i,
-                    prompt=rng.integers(0, 50, 8).astype(np.int32),
-                    t_input_ms=float(t_inputs[i]))
-                srv.handle(req, t_sla=t_sla)
-            trace = rec.to_trace(
-                name=f"proto-{spec}", source="server",
-                meta={"policy": spec, "t_sla": t_sla,
-                      "models": [p.name for p in live_profiles]})
-        trace = _roundtrip(trace, tmpdir)
-        profs = _capture_profiles(trace, live_profiles)
-        sim = simulate(profs, SimConfig(
-            t_sla=t_sla, n_requests=len(trace),
-            network=CapturedTraceProcess(trace, mode="exact"),
-            policy=make_policy(spec, t_threshold=30.0, seed=SEED),
-            seed=SEED),
-            exec_override=_exec_override(trace, [p.name for p in profs]))
+        trace, sim = _capture_and_replay(srv, spec, n_requests, t_sla,
+                                         tin_proc, tmpdir, "proto")
         gap = sim.attainment - trace.attainment
         ok = abs(gap) <= tol
         if not ok:
@@ -179,6 +198,51 @@ def proto_rows(n_requests: int, policies, tol: float, tmpdir: str):
             "cap_att": f"{trace.attainment:.3f}",
             "sim_att": f"{sim.attainment:.3f}", "gap": f"{gap:+.3f}",
             "within_tol": ok, "roundtrip": "bit-exact"}))
+    return rows, failures
+
+
+# --------------------------------------------------------------------------
+# Section 1b: measured zoo (fp32 + int8 engines) → simulator replay
+# --------------------------------------------------------------------------
+
+def measured_rows(n_requests: int, tol: float, tmpdir: str,
+                  policies=("cnnselect", "greedy_nw")):
+    """The measured-serving gate (DESIGN.md §14): a CNNSelectServer over
+    the live `MEASURED_ZOO` engines (fp32 + int8 candidates) captures
+    executed per-request exec_ms; the capture replays through
+    `simulate(exec_override=…)` and the sim-vs-measured attainment gap
+    is the row. This pins the control stack against *executed* models,
+    not Table 5 lookups."""
+    from repro.serving.measured import build_zoo, served_models
+    from repro.serving.server import CNNSelectServer
+
+    zoo = build_zoo(batch_size=1, max_seq=64)
+    srv = CNNSelectServer(served_models(zoo), t_threshold=30.0, n_tokens=2)
+    srv.profile_models(prompt_len=8, reps=3)
+    live = srv.current_profiles()
+    tin_proc = TraceReplayProcess(
+        0.2 * synthetic_trace("wifi_lte_step", n_requests),
+        jitter_cv=0.15, name="wifi_lte_step*0.2")
+    # SLA between the fastest and slowest engines so selection matters.
+    t_sla = float(2.2 * tin_proc.mean
+                  + 1.25 * np.median([p.mu for p in live]))
+    rows, failures = [], []
+    for spec in policies:
+        trace, sim = _capture_and_replay(srv, spec, n_requests, t_sla,
+                                         tin_proc, tmpdir, "measured")
+        gap = sim.attainment - trace.attainment
+        ok = abs(gap) <= tol
+        if not ok:
+            failures.append(f"measured.{spec}: gap {gap:+.3f} > {tol}")
+        sel = {m: int((trace.model == m).sum()) for m in zoo}
+        int8_share = sum(v for m, v in sel.items()
+                         if zoo[m].quant == "int8") / max(1, len(trace))
+        rows.append(row(f"trace_replay.measured.{spec}", 0.0, {
+            "n": len(trace), "sla_ms": f"{t_sla:.0f}",
+            "cap_att": f"{trace.attainment:.3f}",
+            "sim_att": f"{sim.attainment:.3f}", "gap": f"{gap:+.3f}",
+            "within_tol": ok, "int8_share": f"{int8_share:.2f}",
+            "sel": "/".join(f"{m}:{v}" for m, v in sel.items() if v)}))
     return rows, failures
 
 
@@ -255,11 +319,17 @@ def reference_rows(n_requests: int):
 
 def run_checked(n_requests: int = 400, policies=PROTO_POLICIES,
                 tol: float = 0.02,
-                sections=("proto", "sim", "reference")):
+                sections=("proto", "measured", "sim", "reference"),
+                measured_policies=("cnnselect", "greedy_nw")):
     rows, failures = [], []
     with tempfile.TemporaryDirectory() as tmpdir:
         if "proto" in sections:
             r, f = proto_rows(n_requests, policies, tol, tmpdir)
+            rows += r
+            failures += f
+        if "measured" in sections:
+            r, f = measured_rows(n_requests, tol, tmpdir,
+                                 policies=measured_policies)
             rows += r
             failures += f
         if "sim" in sections:
@@ -286,7 +356,13 @@ def main():
                          "prototype section")
     ap.add_argument("--tol", type=float, default=0.02,
                     help="max |sim - capture| attainment gap")
-    ap.add_argument("--sections", default="proto,sim,reference")
+    ap.add_argument("--sections", default="proto,measured,sim,reference")
+    ap.add_argument("--measured-policies", default="cnnselect,greedy_nw",
+                    help="comma-separated registry specs for the "
+                         "measured-zoo section (the CI gate pins "
+                         "cnnselect; greedy_nw's online-profile drift "
+                         "makes its selections replay-divergent at "
+                         "small n)")
     ap.add_argument("--check", action="store_true",
                     help="exit non-zero when any gap exceeds --tol "
                          "(the CI sim-to-real smoke)")
@@ -299,8 +375,10 @@ def main():
         print(f"wrote {path} ({len(trace)} requests, "
               f"attainment {trace.attainment:.3f})")
         return
-    rows, failures = run_checked(args.n_requests, args.policies.split(","),
-                                 args.tol, args.sections.split(","))
+    rows, failures = run_checked(
+        args.n_requests, args.policies.split(","), args.tol,
+        args.sections.split(","),
+        measured_policies=args.measured_policies.split(","))
     emit(rows)
     if failures:
         print("\n".join(f"FAIL {f}" for f in failures), file=sys.stderr)

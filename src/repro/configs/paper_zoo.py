@@ -212,6 +212,41 @@ CONTROLLER_SCENARIOS = {
 }
 
 
+# --------------------------------------------------------------------------
+# Measured zoo (DESIGN.md §14): models the repo actually RUNS behind the
+# Router, replacing Table 5 lookups with this host's latencies.
+# --------------------------------------------------------------------------
+
+# Reduced attention-only LM variants (stablelm family — maskable KV-cache
+# pattern, so padded prompts and mid-group slot backfill work) sized to
+# run on CPU CI. d_model/d_ff/n_layers stratify latency the way Table 5's
+# CNN depth does; `accuracy` is the offline task score attached to each
+# candidate. int8 variants are *distinct selection candidates*: they pay
+# a small accuracy penalty but ~75% storage, so under a memory budget a
+# quantized larger model can sit on the frontier where its fp32 parent
+# cannot fit — the "Smart at what cost?" trade-off. `lm_base_int8`'s
+# fp32 parent is deliberately absent for exactly that reason.
+MEASURED_ZOO = {
+    "lm_tiny":       dict(arch="stablelm_1_6b", d_model=48, d_ff=96,
+                          n_layers=2, quant=None, accuracy=0.58),
+    "lm_small":      dict(arch="stablelm_1_6b", d_model=96, d_ff=192,
+                          n_layers=2, quant=None, accuracy=0.66),
+    "lm_small_int8": dict(arch="stablelm_1_6b", d_model=96, d_ff=192,
+                          n_layers=2, quant="int8", accuracy=0.652),
+    "lm_base_int8":  dict(arch="stablelm_1_6b", d_model=160, d_ff=320,
+                          n_layers=4, quant="int8", accuracy=0.72),
+}
+
+
+def measured_zoo_names(subset=None):
+    names = list(subset) if subset else list(MEASURED_ZOO)
+    for n in names:
+        if n not in MEASURED_ZOO:
+            raise ValueError(f"unknown measured-zoo model {n!r}; known: "
+                             f"{', '.join(MEASURED_ZOO)}")
+    return names
+
+
 def paper_profiles(subset=None):
     """ModelProfile list from Table 5 (top-1 accuracy as A(m))."""
     names = subset or list(TABLE5)

@@ -99,6 +99,16 @@ def _attn_mask(pos_q, pos_k, window: int):
     return m
 
 
+def _row_mask(pos_k, valid_from):
+    """(B, Tk) bool: per-row first-valid key position.
+
+    Rows in a batched cache can start at different positions (left-padded
+    prompts, or a backfilled slot whose previous occupant left stale k/v
+    behind): key position p is attendable for row b only if
+    p >= valid_from[b]. The shared cache `pos` array stays (S,)."""
+    return pos_k[None, :] >= valid_from[:, None]
+
+
 def _repeat_kv(k, rep: int):
     """(B,S,KV,hd) -> (B,S,KV*rep,hd).
 
@@ -110,7 +120,8 @@ def _repeat_kv(k, rep: int):
     return jnp.repeat(k, rep, axis=2) if rep > 1 else k
 
 
-def attention_naive(q, k, v, pos_q, pos_k, *, window: int, cap: float, scale: float):
+def attention_naive(q, k, v, pos_q, pos_k, *, window: int, cap: float,
+                    scale: float, valid_from=None):
     """q: (B,Tq,Hq,hd); k,v: (B,Tk,KV,hd). Returns (B,Tq,Hq,hd)."""
     B, Tq, Hq, hd = q.shape
     KV = k.shape[2]
@@ -121,12 +132,16 @@ def attention_naive(q, k, v, pos_q, pos_k, *, window: int, cap: float, scale: fl
     logits = softcap(logits, cap)
     mask = _attn_mask(pos_q, pos_k, window)
     logits = jnp.where(mask[None, None], logits, -1e30)
+    if valid_from is not None:
+        rm = _row_mask(pos_k, valid_from)  # (B, Tk)
+        logits = jnp.where(rm[:, None, None, :], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
     return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
 
 
 def attention_chunked(q, k, v, pos_q, pos_k, *, window: int, cap: float,
-                      scale: float, chunk_q: int, chunk_k: int):
+                      scale: float, chunk_q: int, chunk_k: int,
+                      valid_from=None):
     """Pure-JAX flash attention: scan over query chunks, inner scan over
     key chunks, maintaining running (max, denom, acc)."""
     B, Tq, Hq, hd = q.shape
@@ -168,6 +183,9 @@ def attention_chunked(q, k, v, pos_q, pos_k, *, window: int, cap: float,
             logits = softcap(logits, cap)
             mask = _attn_mask(pq, pk, window)
             logits = jnp.where(mask[None, None], logits, -1e30)
+            if valid_from is not None:
+                rm = _row_mask(pk, valid_from)  # (B, ck)
+                logits = jnp.where(rm[:, None, None, :], logits, -1e30)
             m_new = jnp.maximum(m, logits.max(axis=-1))
             p = jnp.exp(logits - m_new[..., None])
             corr = jnp.exp(m - m_new)
@@ -186,7 +204,8 @@ def attention_chunked(q, k, v, pos_q, pos_k, *, window: int, cap: float,
     return out[:, :Tq]
 
 
-def attention(q, k, v, pos_q, pos_k, cfg: ModelConfig, *, window: int):
+def attention(q, k, v, pos_q, pos_k, cfg: ModelConfig, *, window: int,
+              valid_from=None):
     scale = cfg.head_dim ** -0.5
     cap = cfg.attn_softcap
     impl = cfg.attn_impl
@@ -195,20 +214,24 @@ def attention(q, k, v, pos_q, pos_k, cfg: ModelConfig, *, window: int):
         impl = "naive" if Tq * Tk <= 4096 * 4096 and Tq > 1 else (
             "naive" if Tq == 1 else "jax_chunked")
     if impl == "pallas":
+        if valid_from is not None:
+            raise NotImplementedError(
+                "per-row valid_from masking is not supported by the pallas "
+                "attention kernel; use attn_impl='naive'/'jax_chunked'")
         from repro.kernels import ops as kops  # deferred: TPU-only path
         return kops.flash_attention(q, k, v, pos_q, pos_k, window=window,
                                     softcap=cap, scale=scale)
     if impl == "jax_chunked" and Tq > 1:
         return attention_chunked(q, k, v, pos_q, pos_k, window=window, cap=cap,
                                  scale=scale, chunk_q=cfg.attn_chunk,
-                                 chunk_k=cfg.attn_chunk)
+                                 chunk_k=cfg.attn_chunk, valid_from=valid_from)
     return attention_naive(q, k, v, pos_q, pos_k, window=window, cap=cap,
-                           scale=scale)
+                           scale=scale, valid_from=valid_from)
 
 
 def attn_block(p, x, cfg: ModelConfig, kind: str, positions,
                cache: Optional[dict] = None, cache_pos=None,
-               constrain=None, parallel=None):
+               constrain=None, parallel=None, valid_from=None):
     """Pre-norm attention block. Returns (x_out, new_cache).
 
     Train/prefill: cache is None, positions = (T,) absolute positions.
@@ -217,6 +240,9 @@ def attn_block(p, x, cfg: ModelConfig, kind: str, positions,
     constrain: optional residual sharding constraint (sequence
     parallelism) applied after every residual add, so GSPMD turns the
     row-parallel all-reduces into reduce-scatters.
+    valid_from: optional (B,) int32 — per row, the first key position this
+    row may attend to (masks left-padding and, on backfilled slots, the
+    previous occupant's stale cache entries).
     """
     window = cfg.window if kind == "local" else 0
     eps = cfg.norm_eps
@@ -252,6 +278,10 @@ def attn_block(p, x, cfg: ModelConfig, kind: str, positions,
         # Sequence-sharded cache (kv < tp): explicit distributed
         # flash-decode — masked local cache write + partial-softmax merge
         # (GSPMD's generic handling all-gathered the cache per layer).
+        if valid_from is not None:
+            raise NotImplementedError(
+                "valid_from masking is not supported on the sharded "
+                "flash-decode path")
         from repro.models.flash_decode import flash_decode_sharded
         out, ckn, cvn, cpn = flash_decode_sharded(
             q, k, v, cache["k"], cache["v"], cache["pos"], cache_pos,
@@ -295,7 +325,8 @@ def attn_block(p, x, cfg: ModelConfig, kind: str, positions,
         pos_q = pos_k = positions
 
     if out is None:
-        out = attention(q, k, v, pos_q, pos_k, cfg, window=window)
+        out = attention(q, k, v, pos_q, pos_k, cfg, window=window,
+                        valid_from=valid_from)
     out = jnp.einsum("bthk,hkd->btd", out, p["wo"])
     if cfg.sandwich_norm:
         out = rms_norm(out, p["post_attn_norm"], eps)

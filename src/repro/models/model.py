@@ -115,16 +115,23 @@ def cache_logical_axes(cfg: ModelConfig, batch: int = 1, max_seq: int = 8):
 # --------------------------------------------------------------------------
 
 def _apply_block(kind: str, p, x, cfg: ModelConfig, positions, cache,
-                 cache_pos, parallel, constrain=None):
+                 cache_pos, parallel, constrain=None, valid_from=None):
     """Returns (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
+    if valid_from is not None and kind in ("rglru", "ssd"):
+        # Recurrent state integrates every input step sequentially — a
+        # left-padded prompt contaminates h/S/conv in a way no attention
+        # mask can undo. Callers must feed unpadded sequences instead.
+        raise NotImplementedError(
+            f"valid_from masking cannot be applied to recurrent blocks "
+            f"({kind}); feed unpadded sequences")
     if kind in ("attn", "global", "local"):
         x, nc = attn_block(p, x, cfg, kind, positions, cache, cache_pos,
-                           constrain, parallel)
+                           constrain, parallel, valid_from)
         return x, nc, aux
     if kind == "moe":
         x, nc = attn_block(p, x, cfg, kind, positions, cache, cache_pos,
-                           constrain, parallel)
+                           constrain, parallel, valid_from)
         h = rms_norm(x, p["ln2"], cfg.norm_eps)
         out, aux = moe_block_ffn(p, h, cfg, parallel)
         if cfg.sandwich_norm:
@@ -158,12 +165,16 @@ def _apply_block(kind: str, p, x, cfg: ModelConfig, positions, cache,
 
 def forward(params, inputs, cfg: ModelConfig, *, parallel=None,
             cache=None, cache_pos=None, positions=None,
-            logits_last_only: bool = False):
+            logits_last_only: bool = False, valid_from=None):
     """inputs: (B,T) int tokens or (B,T,d) embeddings (frontend stubs).
 
     cache=None: plain forward. cache given & T>1: prefill (fills cache).
     logits_last_only: unembed only the final position (serving prefill —
     avoids materializing the (B,S,V) logits tensor).
+    valid_from: optional (B,) int32 per-row first attendable position —
+    masks left-padded prompt slots (and stale cache rows after a slot
+    backfill) out of attention. Attention-only patterns; recurrent
+    blocks raise.
     Returns (logits, {"aux_loss", "cache"}).
     """
     compute_dtype = dtype_of(cfg.compute_dtype)
@@ -214,7 +225,8 @@ def forward(params, inputs, cfg: ModelConfig, *, parallel=None,
         for i, kind in enumerate(cfg.pattern):
             c = None if bcs is None else bcs[i]
             x, nc, a = _apply_block(kind, bps[i], x, cfg, positions, c,
-                                    cache_pos, parallel, constrain)
+                                    cache_pos, parallel, constrain,
+                                    valid_from)
             new_caches.append(nc)
             aux = aux + a
         if entry_constrain is not None:
@@ -274,7 +286,7 @@ def forward(params, inputs, cfg: ModelConfig, *, parallel=None,
     for i, kind in enumerate(cfg.tail_kinds):
         c = None if tcaches is None else tcaches[i]
         x, nc, a = _apply_block(kind, params["tail"][i], x, cfg, positions, c,
-                                cache_pos, parallel)
+                                cache_pos, parallel, valid_from=valid_from)
         new_tail.append(nc)
         aux = aux + a
 
@@ -294,24 +306,31 @@ def forward(params, inputs, cfg: ModelConfig, *, parallel=None,
 
 
 def decode_step(params, token, cache, cache_pos, cfg: ModelConfig, *,
-                parallel=None):
+                parallel=None, valid_from=None):
     """One decode step. token: (B,1) int32 (or (B,1,d) embeddings);
     cache_pos: scalar int32 = number of tokens already in context.
+    valid_from: optional (B,) per-row first attendable cache position.
     Returns (logits (B,1,V), new_cache)."""
     positions = cache_pos[None].astype(jnp.int32)
     logits, extras = forward(params, token, cfg, parallel=parallel,
                              cache=cache, cache_pos=cache_pos,
-                             positions=positions)
+                             positions=positions, valid_from=valid_from)
     return logits, extras["cache"]
 
 
 def prefill(params, inputs, cfg: ModelConfig, max_seq: int, *, parallel=None,
-            logits_last_only: bool = False):
-    """Full-sequence prefill: returns (logits, cache ready for decoding)."""
+            logits_last_only: bool = False, valid_from=None):
+    """Full-sequence prefill: returns (logits, cache ready for decoding).
+
+    valid_from: optional (B,) int32 — with left-padded prompts, row b's
+    real tokens start at position valid_from[b]; padding slots are masked
+    out of every attention so they cannot contaminate logits or the KV
+    cache reads of later decode steps."""
     B, T = inputs.shape[0], inputs.shape[1]
     cache = init_cache(cfg, B, max_seq)
     logits, extras = forward(params, inputs, cfg, parallel=parallel,
                              cache=cache,
                              positions=jnp.arange(T, dtype=jnp.int32),
-                             logits_last_only=logits_last_only)
+                             logits_last_only=logits_last_only,
+                             valid_from=valid_from)
     return logits, extras["cache"]

@@ -55,9 +55,13 @@ class FifoQueue:
 class ContinuousBatcher:
     """Groups requests into aligned decode batches of size `batch_size`.
 
-    step(now) returns work items: ("prefill", [reqs]) when a fresh group
-    forms, then ("decode", group) while any member needs tokens. Members
-    finishing early free their slot for the next group formation."""
+    `form_group(now)` seeds a fresh group when the engine is idle;
+    `backfill(now, ...)` joins queued arrivals into slots freed by
+    early-retiring members *mid-group* (true continuous batching — the
+    engine prefills the newcomer's row into the live cache via
+    `InferenceEngine.prefill_row`). Decode steps stay aligned across the
+    group (engine constraint); the scheduler's job is slot assignment,
+    padding, and retirement."""
 
     def __init__(self, batch_size: int, prompt_len: int):
         self.batch_size = batch_size
@@ -98,7 +102,39 @@ class ContinuousBatcher:
             r.start_exec = now
         return ready
 
+    def backfill(self, now: float, budget: Optional[int] = None):
+        """Join queued arrivals into freed slots mid-group.
+
+        Returns [(slot_index, request)] for the engine to `prefill_row`.
+        budget: optional cap on decode steps the group can still take
+        (engine free context) — a joiner needing more tokens than the
+        cache has room for must wait for the next fresh group."""
+        if self.n_active == 0:
+            return []        # nothing live to join; use form_group
+        joins = []
+        deferred = []
+        for i, slot in enumerate(self.slots):
+            if slot is not None:
+                continue
+            while self.queue and self.queue[0].arrival <= now:
+                r = heapq.heappop(self.queue)
+                if budget is not None and r.max_new_tokens > budget:
+                    deferred.append(r)
+                    continue
+                self.slots[i] = r
+                r.start_exec = now
+                joins.append((i, r))
+                break
+            if self.slots[i] is None:
+                break        # queue exhausted (or all remaining deferred)
+        for r in deferred:
+            heapq.heappush(self.queue, r)
+        return joins
+
     def pad_prompts(self) -> np.ndarray:
+        """Left-pad live prompts to (batch_size, prompt_len). Pad token is
+        0 — harmless only because the engine masks positions below each
+        row's real length (see `prompt_lengths`)."""
         out = np.zeros((self.batch_size, self.prompt_len), np.int32)
         for i, r in enumerate(self.slots):
             if r is not None:
@@ -106,13 +142,28 @@ class ContinuousBatcher:
                 out[i, -len(p):] = p
         return out
 
+    def prompt_lengths(self) -> np.ndarray:
+        """(batch_size,) real token count per row of `pad_prompts` output
+        (1 for empty slots — a full-mask row would NaN the softmax)."""
+        out = np.ones(self.batch_size, np.int64)
+        for i, r in enumerate(self.slots):
+            if r is not None:
+                out[i] = min(len(r.prompt), self.prompt_len)
+        return out
+
+    def record_token(self, slot: int, tok: int, now: float):
+        """Append one token to the request in `slot`; retire it (freeing
+        the slot) once it has max_new_tokens."""
+        r = self.slots[slot]
+        if r is None:
+            return
+        r.tokens.append(int(tok))
+        if len(r.tokens) >= r.max_new_tokens:
+            r.finish = now
+            self.done.append(r)
+            self.slots[slot] = None
+
     def record_tokens(self, toks: np.ndarray, now: float):
         """toks: (batch_size,) — append per slot; retire finished slots."""
-        for i, r in enumerate(self.slots):
-            if r is None:
-                continue
-            r.tokens.append(int(toks[i]))
-            if len(r.tokens) >= r.max_new_tokens:
-                r.finish = now
-                self.done.append(r)
-                self.slots[i] = None
+        for i in range(self.batch_size):
+            self.record_token(i, toks[i], now)

@@ -1,0 +1,99 @@
+"""Measured execution backend: the runnable model zoo behind the Router.
+
+Builds `InferenceEngine`s from `configs.paper_zoo.MEASURED_ZOO` (reduced
+attention-only LMs, fp32 + int8 variants as distinct selection
+candidates) and turns their `measured_profile` outputs into the
+`ModelProfile` list every serving stack consumes — the `ProfileStore`
+source selected with ``profiles="measured"``. This is what moves the
+control plane from Table 5 lookups to latencies executed on this host
+(DESIGN.md §14)."""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+
+from repro.configs import reduced_config
+from repro.configs.paper_zoo import MEASURED_ZOO, measured_zoo_names
+from repro.core.selection import ModelProfile
+from repro.models import init_params
+from repro.quant.int8 import dequantize_tree, quantize_tree, \
+    tree_bytes_quantized
+from repro.serving.engine import InferenceEngine
+from repro.utils import tree_bytes
+
+
+@dataclass
+class MeasuredModel:
+    """One runnable selection candidate: engine + offline metadata."""
+    name: str
+    engine: InferenceEngine
+    accuracy: float
+    size_bytes: int
+    quant: Optional[str] = None
+
+
+def build_model(name: str, *, batch_size: int = 4, max_seq: int = 64,
+                seed: int = 0) -> MeasuredModel:
+    spec = MEASURED_ZOO[name]
+    cfg = reduced_config(spec["arch"])
+    cfg = dataclasses.replace(cfg, d_model=spec["d_model"],
+                              d_ff=spec["d_ff"], n_layers=spec["n_layers"])
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    size = tree_bytes(params)
+    if spec["quant"] == "int8":
+        # Real quantization error in the weights (round-trip through
+        # int8), real storage accounting for the memory budget.
+        q = quantize_tree(params, min_size=256)
+        size = tree_bytes_quantized(q)
+        params = dequantize_tree(q, like=params)
+    engine = InferenceEngine(cfg, params, batch_size=batch_size,
+                             max_seq=max_seq)
+    return MeasuredModel(name=name, engine=engine,
+                         accuracy=spec["accuracy"], size_bytes=size,
+                         quant=spec["quant"])
+
+
+def build_zoo(names=None, *, batch_size: int = 4, max_seq: int = 64,
+              seed: int = 0) -> Dict[str, MeasuredModel]:
+    """{name: MeasuredModel} for the requested zoo subset, in registry
+    order. Engines share batch/seq geometry so one batcher config fits
+    all; params are seeded per model (seed + registry index)."""
+    out = {}
+    for i, n in enumerate(measured_zoo_names(names)):
+        out[n] = build_model(n, batch_size=batch_size, max_seq=max_seq,
+                             seed=seed + i)
+    return out
+
+
+def measured_profiles(zoo: Dict[str, MeasuredModel], *,
+                      prompt_len: int = 8, n_tokens: int = 4,
+                      reps: int = 3, warmup: bool = True,
+                      detail: Optional[dict] = None) -> List[ModelProfile]:
+    """Profile every engine on THIS host and return the `ModelProfile`
+    list the Router/simulator consume — the ``profiles="measured"``
+    source. Cold start is the measured jit-compile time (the serving
+    analogue of the paper's model-load phase). `detail`, if given, is
+    filled with each engine's raw measured_profile dict (prefill_ms /
+    per_token_ms split)."""
+    out = []
+    for name, m in zoo.items():
+        cold_ms = (m.engine.warmup(prompt_len) * 1000.0) if warmup else 0.0
+        p = m.engine.measured_profile(prompt_len, n_tokens, reps)
+        if detail is not None:
+            detail[name] = dict(p, cold_ms=cold_ms)
+        out.append(ModelProfile(
+            name=name, accuracy=m.accuracy, mu=p["mu"],
+            sigma=max(p["sigma"], 1e-3), cold_mu=cold_ms,
+            cold_sigma=0.1 * cold_ms, size_bytes=m.size_bytes))
+    return out
+
+
+def served_models(zoo: Dict[str, MeasuredModel]):
+    """Adapt the zoo to `CNNSelectServer`'s ServedModel list."""
+    from repro.serving.server import ServedModel
+    return [ServedModel(name=m.name, engine=m.engine, accuracy=m.accuracy,
+                        size_bytes=m.size_bytes) for m in zoo.values()]

@@ -21,7 +21,7 @@ import numpy as np
 from repro.core.profiles import ProfileStore
 from repro.core.selection import ModelProfile, Policy, make_policy
 from repro.core.zoo import ModelZoo
-from repro.serving.batching import FifoQueue
+from repro.serving.batching import FifoQueue, Request
 from repro.serving.fleet import EstimatorBank
 from repro.serving.network import TInputEstimator, make_estimator
 
@@ -185,24 +185,26 @@ class Router:
             self.current_profiles(), np.asarray(t_sla, np.float64),
             t_input, realized=realized, detail=detail)
 
-    def enqueue(self, req, name: str) -> None:
+    def enqueue(self, req: Request, name: str) -> None:
         """Admission bookkeeping for an already-routed request — bind
         the model, queue it, record the admission. One copy shared by
         `submit`/`submit_many` and the control plane's adaptive
-        admission path (serving/control.py)."""
+        admission path (serving/control.py). Requests are the canonical
+        `batching.Request` — one dataclass end to end, so device_id/sla
+        metadata cannot drift between admission and execution."""
         req.model = name
         self.queues[name].submit(req)
         if self.recorder is not None:
             self.recorder.record_request(req, model=name)
 
-    def submit(self, req, *, now: float = 0.0) -> RouteDecision:
+    def submit(self, req: Request, *, now: float = 0.0) -> RouteDecision:
         """Route one request and enqueue it on its model's queue."""
         d = self.route(req.sla_ms or 1e9, req.t_input_ms, now=now,
-                       device_id=getattr(req, "device_id", None))
+                       device_id=req.device_id)
         self.enqueue(req, d.name)
         return d
 
-    def submit_many(self, requests: Sequence) -> List[str]:
+    def submit_many(self, requests: Sequence[Request]) -> List[str]:
         """Vectorized admission of a whole trace: one `route_batch` over
         the requests' (sla, t_input) vectors, then enqueue in arrival
         order. Returns the chosen model name per request."""
@@ -210,7 +212,7 @@ class Router:
             return []
         t_sla = np.array([r.sla_ms or 1e9 for r in requests])
         t_in = np.array([r.t_input_ms for r in requests])
-        devs = [getattr(r, "device_id", None) for r in requests]
+        devs = [r.device_id for r in requests]
         idx = self.route_batch(t_sla, t_in, device_ids=devs)
         names = []
         for r, i in zip(requests, idx):

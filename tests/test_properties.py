@@ -331,3 +331,27 @@ def test_scan_engine_matches_python_engine(seed, n_devices, estimator,
     assert [(e["request"], e["device"], e["from"], e["to"])
             for e in ea] == [(e["request"], e["device"], e["from"],
                               e["to"]) for e in eb]
+
+
+# -- continuous batcher slot lifecycle (from test_serving.py) --------------
+
+@settings(max_examples=60, deadline=None)
+@given(
+    batch_size=st.integers(1, 4),
+    specs=st.lists(
+        st.tuples(st.floats(0, 50, allow_nan=False, allow_infinity=False),
+                  st.integers(1, 5)),
+        min_size=1, max_size=16),
+    budget=st.one_of(st.none(), st.integers(1, 8)),
+)
+def test_batcher_slot_lifecycle(batch_size, specs, budget):
+    """Arbitrary arrival schedules: the form_group -> decode ->
+    backfill loop retires every request exactly once with its full
+    token quota, never double-books a slot, never starts a request
+    before it arrives, and defers over-budget joiners rather than
+    dropping them. The harness (shared with the deterministic
+    test_serving tests, so the logic runs without hypothesis too)
+    asserts the invariants every round."""
+    from test_serving import drive_batcher
+
+    drive_batcher(batch_size, 4, specs, budget)

@@ -55,6 +55,92 @@ def test_continuous_batcher_slots():
     assert b.done[0].tokens == [7, 7]
 
 
+def drive_batcher(batch_size, prompt_len, specs, budget=None):
+    """Drive a ContinuousBatcher to completion through the loop's
+    schedule (seed group -> decode round -> backfill joins), checking
+    slot invariants every round. specs: [(arrival, max_new_tokens)].
+    Shared with the hypothesis property suite (test_properties)."""
+    b = ContinuousBatcher(batch_size, prompt_len)
+    for i, (arr, mnt) in enumerate(specs):
+        b.submit(Request(arrival=float(arr), rid=i,
+                         prompt=np.array([1, 2, 3]),
+                         max_new_tokens=int(mnt)))
+    now, rounds = 0.0, 0
+    while b.has_work:
+        rounds += 1
+        assert rounds < 10 * sum(m for _, m in specs) + 100, \
+            "batcher failed to drain"
+        if b.n_active == 0:
+            now = max(now, b.queue[0].arrival)
+            assert b.form_group(now) is not None
+        live = [r.rid for r in b.slots if r is not None]
+        assert len(live) == len(set(live))          # one slot per request
+        b.record_tokens(np.full(batch_size, 7), now)
+        for slot, r in b.backfill(now, budget):
+            assert r.arrival <= now                 # no time travel
+            assert b.slots[slot] is r
+            if budget is not None:
+                assert r.max_new_tokens <= budget   # budget respected
+            b.record_token(slot, 7, now)            # first token at join
+        now += 1.0
+    # Every request retired exactly once with its full token quota.
+    assert sorted(r.rid for r in b.done) == list(range(len(specs)))
+    for r in b.done:
+        assert len(r.tokens) == r.max_new_tokens
+        assert r.start_exec >= r.arrival
+        assert r.finish >= r.start_exec
+    return b
+
+
+def test_batcher_retire_then_backfill_lifecycle():
+    """Deterministic retire->backfill: r1 retires after one token and
+    r2 joins its exact slot mid-group, while r0 keeps decoding."""
+    b = ContinuousBatcher(batch_size=2, prompt_len=4)
+    r0, r1, r2 = (Request(arrival=0.0, rid=i, prompt=np.array([1, 2]),
+                          max_new_tokens=m)
+                  for i, m in [(0, 3), (1, 1), (2, 2)])
+    for r in (r0, r1, r2):
+        b.submit(r)
+    assert [r.rid for r in b.form_group(0.0)] == [0, 1]
+    b.record_tokens(np.array([5, 6]), now=1.0)      # r1 retires -> slot 1
+    assert b.slots[1] is None and b.done == [r1]
+    joins = b.backfill(2.0)
+    assert joins == [(1, r2)] and b.slots[1] is r2  # mid-group join
+    assert r2.start_exec == 2.0
+    b.record_token(1, 7, now=2.0)                   # join-round token
+    b.record_tokens(np.array([5, 8]), now=3.0)      # r2 hits quota
+    assert b.done == [r1, r2] and b.n_active == 1
+    b.record_tokens(np.array([5, 9]), now=4.0)      # stale slot ignored
+    assert r2.tokens == [7, 8]
+    assert r0.tokens == [5, 5, 5] and b.done == [r1, r2, r0]
+    assert not b.has_work
+
+
+def test_batcher_backfill_defers_over_budget():
+    """A joiner needing more decode steps than the engine's remaining
+    cache rows must wait for the next fresh group, without losing its
+    queue position or blocking smaller requests behind it."""
+    b = ContinuousBatcher(batch_size=2, prompt_len=4)
+    big = Request(arrival=0.0, rid=0, prompt=np.array([1]),
+                  max_new_tokens=8)
+    small = Request(arrival=0.0, rid=1, prompt=np.array([1]),
+                    max_new_tokens=2)
+    live = Request(arrival=0.0, rid=2, prompt=np.array([1]),
+                   max_new_tokens=4)
+    b.submit(live)
+    b.form_group(0.0)
+    b.submit(big)
+    b.submit(small)
+    assert b.backfill(1.0, budget=3) == [(1, small)]
+    assert b.queue[0] is big                        # deferred, not lost
+    assert b.backfill(1.0, budget=3) == []
+
+
+def test_batcher_drain_full_schedule():
+    drive_batcher(2, 4, [(0, 3), (0, 1), (0, 2), (5, 2), (5, 4)])
+    drive_batcher(3, 4, [(0, 2), (1, 5), (9, 1)], budget=6)
+
+
 def test_batcher_pad_prompts():
     b = ContinuousBatcher(batch_size=3, prompt_len=5)
     b.submit(Request(arrival=0.0, rid=0, prompt=np.array([1, 2])))
