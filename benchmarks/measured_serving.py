@@ -1,5 +1,6 @@
 """Measured serving capacity: tokens/s and SLA attainment from engines
-that actually execute (DESIGN.md §14).
+that actually execute (DESIGN.md §14), plus the kernel-path perf matrix
+(naive vs masked-pallas × fp32 vs int8, DESIGN.md §15).
 
 One row per `MEASURED_ZOO` candidate: decode tokens/s and prefill
 latency from `InferenceEngine.measured_profile` (prefill/per-token split),
@@ -7,13 +8,29 @@ SLA attainment of the requests CNNSelect routed to it on a short served
 trace, and whether the candidate sits on the accuracy/latency frontier.
 The int8 variants are the paper-adjacent "Smart at what cost?" story:
 `lm_base_int8` trades quantization error for a bigger model inside the
-storage budget and should hold a frontier slot over its fp32 peers."""
+storage budget and should hold a frontier slot over its fp32 peers.
+
+The perf matrix re-runs each zoo row under every attention impl and
+reports tokens/s, prefill_ms and the live resident bytes (int8 engines
+hold (int8, scale) trees). ``--full`` appends the matrix to
+``benchmarks/results/BENCH_measured_serving.json`` as a trajectory
+point. NOTE: on CPU the pallas kernels run in *interpret mode* — the
+matrix measures dispatch/masking correctness-at-speed there, while the
+Mosaic-compiled ratios only mean anything on real TPU.
+
+Smoke (CI fast job): ``python benchmarks/measured_serving.py --smoke``.
+Full (acceptance): ``python benchmarks/measured_serving.py --full``."""
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import time
+
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import RESULTS_DIR, emit, row
 
 N_REQUESTS = 48
 SEED = 11
@@ -102,3 +119,87 @@ def run(n_requests: int = N_REQUESTS):
     }))
     _cache[n_requests] = rows
     return rows
+
+
+IMPLS = ("naive", "pallas")
+
+
+def perf_matrix(names=None, *, batch_size: int = 4, max_seq: int = 64,
+                prompt_len: int = 16, n_tokens: int = 8, reps: int = 3,
+                impls=IMPLS):
+    """(rows, points): every requested zoo row × attention impl, timed
+    on this host. Each point carries tokens/s, prefill_ms, per_token_ms
+    and the engine's live resident bytes; per-model speedup rows compare
+    the pallas fast path against the naive reference."""
+    from repro.configs.paper_zoo import MEASURED_ZOO, measured_zoo_names
+    from repro.serving.measured import build_model
+
+    rows, points = [], []
+    for i, name in enumerate(measured_zoo_names(names)):
+        per = {}
+        for impl in impls:
+            m = build_model(name, batch_size=batch_size, max_seq=max_seq,
+                            seed=SEED + i, attn_impl=impl)
+            m.engine.warmup(prompt_len)
+            p = m.engine.measured_profile(prompt_len, n_tokens, reps)
+            toks_s = batch_size * 1000.0 / max(p["per_token_ms"], 1e-9)
+            per[impl] = toks_s
+            rows.append(row(f"measured.perf.{name}.{impl}",
+                            p["per_token_ms"] * 1e3, {
+                                "tokens_s": f"{toks_s:.0f}",
+                                "prefill_ms": f"{p['prefill_ms']:.2f}",
+                                "resident_mb":
+                                    f"{p['resident_bytes'] / 1e6:.2f}",
+                                "int8": MEASURED_ZOO[name]["quant"] == "int8",
+                            }))
+            points.append({
+                "model": name, "impl": impl,
+                "tokens_s": round(toks_s, 1),
+                "prefill_ms": round(p["prefill_ms"], 3),
+                "per_token_ms": round(p["per_token_ms"], 4),
+                "resident_bytes": int(p["resident_bytes"]),
+                "int8": MEASURED_ZOO[name]["quant"] == "int8",
+            })
+        if "naive" in per and "pallas" in per:
+            rows.append(row(f"measured.perf.{name}.speedup", 0.0, {
+                "pallas_vs_naive": f"{per['pallas'] / per['naive']:.2f}x"}))
+    return rows, points
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tiny model, 1 rep (CI fast-job smoke)")
+    ap.add_argument("--full", action="store_true",
+                    help="full zoo matrix + capacity rows, and append "
+                         "the BENCH_*.json trajectory point")
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=64)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.smoke:
+        rows, _ = perf_matrix(["lm_tiny"], batch_size=2, max_seq=32,
+                              prompt_len=8, n_tokens=2, reps=1)
+        emit(rows)
+        return
+    rows, points = perf_matrix(batch_size=args.batch_size,
+                               max_seq=args.max_seq)
+    if args.full:
+        path = os.path.join(RESULTS_DIR, "BENCH_measured_serving.json")
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        series = []
+        if os.path.exists(path):
+            series = json.load(open(path)).get("series", [])
+        series.append({"unix_time": int(time.time()),
+                       "batch_size": args.batch_size,
+                       "max_seq": args.max_seq, "points": points})
+        with open(path, "w") as f:
+            json.dump({"bench": "measured_serving", "series": series}, f,
+                      indent=2, sort_keys=True)
+        rows.append(row("measured.perf.trajectory", 0.0, {"path": path}))
+        rows += run()
+    emit(rows)
+
+
+if __name__ == "__main__":
+    main()

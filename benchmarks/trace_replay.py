@@ -206,7 +206,8 @@ def proto_rows(n_requests: int, policies, tol: float, tmpdir: str):
 # --------------------------------------------------------------------------
 
 def measured_rows(n_requests: int, tol: float, tmpdir: str,
-                  policies=("cnnselect", "greedy_nw")):
+                  policies=("cnnselect", "greedy_nw"),
+                  impl: str = "pallas"):
     """The measured-serving gate (DESIGN.md §14): a CNNSelectServer over
     the live `MEASURED_ZOO` engines (fp32 + int8 candidates) captures
     executed per-request exec_ms; the capture replays through
@@ -216,7 +217,7 @@ def measured_rows(n_requests: int, tol: float, tmpdir: str,
     from repro.serving.measured import build_zoo, served_models
     from repro.serving.server import CNNSelectServer
 
-    zoo = build_zoo(batch_size=1, max_seq=64)
+    zoo = build_zoo(batch_size=1, max_seq=64, attn_impl=impl)
     srv = CNNSelectServer(served_models(zoo), t_threshold=30.0, n_tokens=2)
     srv.profile_models(prompt_len=8, reps=3)
     live = srv.current_profiles()
@@ -238,7 +239,7 @@ def measured_rows(n_requests: int, tol: float, tmpdir: str,
         int8_share = sum(v for m, v in sel.items()
                          if zoo[m].quant == "int8") / max(1, len(trace))
         rows.append(row(f"trace_replay.measured.{spec}", 0.0, {
-            "n": len(trace), "sla_ms": f"{t_sla:.0f}",
+            "impl": impl, "n": len(trace), "sla_ms": f"{t_sla:.0f}",
             "cap_att": f"{trace.attainment:.3f}",
             "sim_att": f"{sim.attainment:.3f}", "gap": f"{gap:+.3f}",
             "within_tol": ok, "int8_share": f"{int8_share:.2f}",
@@ -320,7 +321,8 @@ def reference_rows(n_requests: int):
 def run_checked(n_requests: int = 400, policies=PROTO_POLICIES,
                 tol: float = 0.02,
                 sections=("proto", "measured", "sim", "reference"),
-                measured_policies=("cnnselect", "greedy_nw")):
+                measured_policies=("cnnselect", "greedy_nw"),
+                measured_impl: str = "pallas"):
     rows, failures = [], []
     with tempfile.TemporaryDirectory() as tmpdir:
         if "proto" in sections:
@@ -329,7 +331,8 @@ def run_checked(n_requests: int = 400, policies=PROTO_POLICIES,
             failures += f
         if "measured" in sections:
             r, f = measured_rows(n_requests, tol, tmpdir,
-                                 policies=measured_policies)
+                                 policies=measured_policies,
+                                 impl=measured_impl)
             rows += r
             failures += f
         if "sim" in sections:
@@ -363,6 +366,10 @@ def main():
                          "cnnselect; greedy_nw's online-profile drift "
                          "makes its selections replay-divergent at "
                          "small n)")
+    ap.add_argument("--measured-impl", default="pallas",
+                    help="attn_impl for the measured-zoo engines "
+                         "(pallas = the masked kernel fast path; "
+                         "naive/jax_chunked for A/B)")
     ap.add_argument("--check", action="store_true",
                     help="exit non-zero when any gap exceeds --tol "
                          "(the CI sim-to-real smoke)")
@@ -378,7 +385,8 @@ def main():
     rows, failures = run_checked(
         args.n_requests, args.policies.split(","), args.tol,
         args.sections.split(","),
-        measured_policies=args.measured_policies.split(","))
+        measured_policies=args.measured_policies.split(","),
+        measured_impl=args.measured_impl)
     emit(rows)
     if failures:
         print("\n".join(f"FAIL {f}" for f in failures), file=sys.stderr)

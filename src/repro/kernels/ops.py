@@ -25,10 +25,12 @@ def _interpret() -> bool:
 
 @functools.partial(jax.jit, static_argnames=("window", "softcap", "scale",
                                              "block_q", "block_k"))
-def flash_attention_btHd(q, k, v, *, window=0, softcap=0.0, scale=None,
-                         block_q=512, block_k=512):
+def flash_attention_btHd(q, k, v, valid_from=None, *, window=0, softcap=0.0,
+                         scale=None, block_q=512, block_k=512):
     """Model-layout wrapper: q (B,T,H,hd), k/v (B,S,KV,hd) — transposes to
-    the kernel's (B,H,T,hd) layout and pads T/S to block multiples."""
+    the kernel's (B,H,T,hd) layout and pads T/S to block multiples.
+    valid_from: optional (B,) first attendable key index (0-based, same
+    axis as the kernel's implicit positions)."""
     B, T, H, hd = q.shape
     S = k.shape[1]
     bq = min(block_q, max(T, 1))
@@ -43,25 +45,33 @@ def flash_attention_btHd(q, k, v, *, window=0, softcap=0.0, scale=None,
     if pad_k:
         kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
         vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
-    out = _flash(qt, kt, vt, window=window, softcap=softcap, scale=scale,
-                 block_q=bq, block_k=bk, interpret=_interpret())
+    out = _flash(qt, kt, vt, valid_from, window=window, softcap=softcap,
+                 scale=scale, block_q=bq, block_k=bk, interpret=_interpret())
     out = out[:, :, :T]
     return jnp.moveaxis(out, 1, 2)
 
 
-def flash_attention(q, k, v, pos_q, pos_k, *, window=0, softcap=0.0,
-                    scale=None):
+def flash_attention(q, k, v, pos_q, pos_k, valid_from=None, *, window=0,
+                    softcap=0.0, scale=None):
     """Entry point matching repro.models.layers.attention's signature
-    (prefill path: positions are 0..T-1)."""
-    return flash_attention_btHd(q, k, v, window=window, softcap=softcap,
-                                scale=scale)
+    (prefill path: pos_q == pos_k, contiguous). The kernel's positions
+    are implicit 0-based indices; `valid_from` is absolute (engine
+    coordinates), so shift it by the window start — prefill_row runs at
+    offset..offset+T-1 and causal/window masking is shift-invariant,
+    but valid_from is not."""
+    if valid_from is not None:
+        valid_from = valid_from - pos_k[0]
+    return flash_attention_btHd(q, k, v, valid_from, window=window,
+                                softcap=softcap, scale=scale)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "softcap", "scale",
-                                             "block_s"))
-def decode_attention(q, k, v, pos, cache_pos, *, window=0, softcap=0.0,
-                     scale=None, block_s=512):
-    """q: (B,1,H,hd) or (B,H,hd); k/v: (B,S,KV,hd) model layout."""
+                                             "block_s", "linear"))
+def decode_attention(q, k, v, pos, cache_pos, valid_from=None, *, window=0,
+                     softcap=0.0, scale=None, block_s=512, linear=False):
+    """q: (B,1,H,hd) or (B,H,hd); k/v: (B,S,KV,hd) model layout.
+    valid_from: optional (B,) first attendable stored position; linear
+    declares slot == position (full-seq caches), enabling block skip."""
     squeeze = q.ndim == 4
     if squeeze:
         q = q[:, 0]
@@ -74,8 +84,9 @@ def decode_attention(q, k, v, pos, cache_pos, *, window=0, softcap=0.0,
         kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
         vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
         pos = jnp.pad(pos, (0, pad), constant_values=-1)
-    out = _decode(q, kt, vt, pos, cache_pos, window=window, softcap=softcap,
-                  scale=scale, block_s=bs, interpret=_interpret())
+    out = _decode(q, kt, vt, pos, cache_pos, valid_from, window=window,
+                  softcap=softcap, scale=scale, block_s=bs, linear=linear,
+                  interpret=_interpret())
     return out[:, None] if squeeze else out
 
 

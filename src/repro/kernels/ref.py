@@ -11,9 +11,13 @@ def softcap(x, cap: float):
 
 
 def flash_attention_ref(q, k, v, *, window: int = 0, cap: float = 0.0,
-                        scale: float | None = None, causal: bool = True):
+                        scale: float | None = None, causal: bool = True,
+                        valid_from=None):
     """q: (B, Hq, T, hd); k, v: (B, KV, S, hd). Positions are implicit
-    (q position i == kv position i). Returns (B, Hq, T, hd) in q.dtype."""
+    (q position i == kv position i). valid_from: optional (B,) first
+    attendable key index per batch row; query rows with no attendable
+    key at all produce zeros (the shared masked-attention semantic —
+    DESIGN.md §15). Returns (B, Hq, T, hd) in q.dtype."""
     B, Hq, T, hd = q.shape
     KV, S = k.shape[1], k.shape[2]
     rep = Hq // KV
@@ -28,16 +32,24 @@ def flash_attention_ref(q, k, v, *, window: int = 0, cap: float = 0.0,
         mask &= pos_k <= pos_q
     if window:
         mask &= pos_k > pos_q - window
-    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    mask = mask[None] if valid_from is None else (
+        mask[None] & (pos_k[None] >= valid_from[:, None, None]))  # (B,T,S)
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bgrts,bgsh->bgrth", p, v.astype(jnp.float32))
+    if valid_from is not None:
+        any_valid = mask.any(axis=-1)                             # (B,T)
+        out = jnp.where(any_valid[:, None, None, :, None], out, 0.0)
     return out.reshape(B, Hq, T, hd).astype(q.dtype)
 
 
 def decode_attention_ref(q, k, v, pos, cache_pos, *, cap: float = 0.0,
-                         scale: float | None = None, window: int = 0):
+                         scale: float | None = None, window: int = 0,
+                         valid_from=None):
     """q: (B, Hq, hd); k, v: (B, KV, S, hd); pos: (S,) stored positions
-    (-1 = unwritten); cache_pos: scalar current position. (B, Hq, hd)."""
+    (-1 = unwritten); cache_pos: scalar current position. valid_from:
+    optional (B,) first attendable stored position per row (rows with no
+    attendable slot produce zeros). (B, Hq, hd)."""
     B, Hq, hd = q.shape
     KV, S = k.shape[1], k.shape[2]
     rep = Hq // KV
@@ -48,9 +60,13 @@ def decode_attention_ref(q, k, v, pos, cache_pos, *, cap: float = 0.0,
     valid = (pos >= 0) & (pos <= cache_pos)
     if window:
         valid &= pos > cache_pos - window
-    logits = jnp.where(valid[None, None, None], logits, -1e30)
+    valid = valid[None] if valid_from is None else (
+        valid[None] & (pos[None] >= valid_from[:, None]))          # (B,S)
+    logits = jnp.where(valid[:, None, None], logits, -1e30)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bgrs,bgsh->bgrh", p, v.astype(jnp.float32))
+    if valid_from is not None:
+        out = jnp.where(valid.any(axis=-1)[:, None, None, None], out, 0.0)
     return out.reshape(B, Hq, hd).astype(q.dtype)
 
 

@@ -31,9 +31,13 @@ from repro.utils import shard_map
 
 
 def flash_decode_sharded(q, k_new, v_new, ck, cv, cpos, cache_pos,
-                         cfg: ModelConfig, parallel, *, window: int):
+                         cfg: ModelConfig, parallel, *, window: int,
+                         valid_from=None):
     """q/k_new/v_new: (B,1,H|KV,hd); ck/cv: (B,S,KV,hd); cpos: (S,);
-    cache_pos: scalar. Returns (out (B,1,H,hd), ck', cv', cpos')."""
+    cache_pos: scalar; valid_from: optional (B,) first attendable stored
+    position per row (masked into each shard's local chunk before the
+    partial-softmax merge; rows with no attendable slot produce zeros).
+    Returns (out (B,1,H,hd), ck', cv', cpos')."""
     tp = parallel.tp_axis
     tp_size = parallel.mesh.shape[tp]
     B, S = ck.shape[0], ck.shape[1]
@@ -46,7 +50,7 @@ def flash_decode_sharded(q, k_new, v_new, ck, cv, cpos, cache_pos,
     scale = cfg.head_dim ** -0.5
     cap = cfg.attn_softcap
 
-    def device_fn(qb, knb, vnb, ckb, cvb, posb, cpos_s):
+    def device_fn(qb, knb, vnb, ckb, cvb, posb, cpos_s, vfb):
         i = jax.lax.axis_index(tp)
         S_loc = ckb.shape[1]
         slot_g = cpos_s % S
@@ -78,25 +82,38 @@ def flash_decode_sharded(q, k_new, v_new, ck, cv, cpos, cache_pos,
         valid = (posb >= 0) & (posb <= cpos_s)
         if window:
             valid &= posb > cpos_s - window
-        s = jnp.where(valid[None, None, None, :], s, -1e30)
+        if valid_from is None:
+            s = jnp.where(valid[None, None, None, :], s, -1e30)
+        else:
+            vmask = valid[None, :] & (posb[None, :] >= vfb[:, None])  # (B,S)
+            s = jnp.where(vmask[:, None, None, :], s, -1e30)
         m_loc = s.max(axis=-1)                                  # (B,KV,rep)
         m = jax.lax.pmax(m_loc, tp)
         p = jnp.exp(s - m[..., None])
         l = jax.lax.psum(p.sum(axis=-1), tp)                    # (B,KV,rep)
         acc = jnp.einsum("bgrk,bkgd->bgrd", p, cvb.astype(jnp.float32))
         acc = jax.lax.psum(acc, tp)
-        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(qb.dtype)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        if valid_from is not None:
+            # Rows with no attendable slot anywhere (m still at the
+            # -1e30 fill after the global pmax) produce zeros, matching
+            # the shared masked-attention semantic (DESIGN.md §15).
+            out = jnp.where((m > -5e29)[..., None], out, 0.0)
+        out = out.astype(qb.dtype)
         return out.reshape(Bq, 1, H, hd), ckb, cvb, posb
 
+    vf = (jnp.zeros((B,), jnp.int32) if valid_from is None
+          else jnp.asarray(valid_from, jnp.int32))
     fn = shard_map(
         device_fn,
         mesh=parallel.mesh,
-        in_specs=(bspec4, bspec4, bspec4, cspec, cspec, P(tp), P()),
+        in_specs=(bspec4, bspec4, bspec4, cspec, cspec, P(tp), P(),
+                  P(baxes)),
         out_specs=(bspec4, cspec, cspec, P(tp)),
         check_vma=False,
     )
     return fn(q, k_new, v_new, ck, cv, cpos,
-              jnp.asarray(cache_pos, jnp.int32))
+              jnp.asarray(cache_pos, jnp.int32), vf)
 
 
 def _prod(it):

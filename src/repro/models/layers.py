@@ -136,7 +136,14 @@ def attention_naive(q, k, v, pos_q, pos_k, *, window: int, cap: float,
         rm = _row_mask(pos_k, valid_from)  # (B, Tk)
         logits = jnp.where(rm[:, None, None, :], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
-    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    if valid_from is not None:
+        # Shared masked-attention semantic (DESIGN.md §15): a query row
+        # with no attendable key produces zeros, not the uniform-softmax
+        # average the -1e30 fill would otherwise renormalize to.
+        any_valid = (mask[None] & rm[:, None, :]).any(-1)  # (B, Tq)
+        out = jnp.where(any_valid[:, :, None, None], out, 0.0)
+    return out
 
 
 def attention_chunked(q, k, v, pos_q, pos_k, *, window: int, cap: float,
@@ -175,9 +182,8 @@ def attention_chunked(q, k, v, pos_q, pos_k, *, window: int, cap: float,
         l0 = jnp.zeros((B, Hq, cq), jnp.float32)
         a0 = jnp.zeros((B, Hq, cq, hd), jnp.float32)
 
-        def k_body(carry, k_in):
+        def k_step(carry, kc, vc, pk):
             m, l, acc = carry
-            kc, vc, pk = k_in
             logits = jnp.einsum("bqhd,bkhd->bhqk", qc * scale, kc,
                                 preferred_element_type=jnp.float32)
             logits = softcap(logits, cap)
@@ -192,16 +198,80 @@ def attention_chunked(q, k, v, pos_q, pos_k, *, window: int, cap: float,
             l = l * corr + p.sum(axis=-1)
             acc = acc * corr[..., None] + jnp.einsum(
                 "bhqk,bkhd->bhqd", p, vc, preferred_element_type=jnp.float32)
-            return (m_new, l, acc), None
+            return m_new, l, acc
+
+        def k_body(carry, k_in):
+            kc, vc, pk = k_in
+            if valid_from is None:
+                return k_step(carry, kc, vc, pk), None
+            # Early-skip invariant (shared with the pallas kernels,
+            # DESIGN.md §15): a key chunk entirely below every row's
+            # valid_from is fully masked for the whole batch and
+            # contributes nothing — skip its compute outright.
+            run = pk.max() >= jnp.min(valid_from)
+            return jax.lax.cond(
+                run, lambda c: k_step(c, kc, vc, pk), lambda c: c,
+                carry), None
 
         (m, l, acc), _ = jax.lax.scan(k_body, (m0, l0, a0), (ks, vs, pks))
         out = acc / jnp.maximum(l, 1e-30)[..., None]
+        if valid_from is not None:
+            # Fully-masked rows (m never rose above the -1e30 fill; the
+            # -inf init marks rows whose every chunk was skipped): zeros.
+            out = jnp.where((m > -5e29)[..., None], out, 0.0)
         out = out.transpose(0, 2, 1, 3)  # (B,cq,H,hd)
         return None, out.astype(v.dtype)
 
     _, outs = jax.lax.scan(q_body, None, (qs, pqs))  # (nq,B,cq,H,hd)
     out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nq * cq, Hq, hd)
     return out[:, :Tq]
+
+
+def _impl_naive(q, k, v, pos_q, pos_k, cfg, *, window, cap, scale,
+                valid_from):
+    return attention_naive(q, k, v, pos_q, pos_k, window=window, cap=cap,
+                           scale=scale, valid_from=valid_from)
+
+
+def _impl_chunked(q, k, v, pos_q, pos_k, cfg, *, window, cap, scale,
+                  valid_from):
+    if q.shape[1] == 1:  # single-token: chunking buys nothing
+        return attention_naive(q, k, v, pos_q, pos_k, window=window, cap=cap,
+                               scale=scale, valid_from=valid_from)
+    return attention_chunked(q, k, v, pos_q, pos_k, window=window, cap=cap,
+                             scale=scale, chunk_q=cfg.attn_chunk,
+                             chunk_k=cfg.attn_chunk, valid_from=valid_from)
+
+
+def _impl_pallas(q, k, v, pos_q, pos_k, cfg, *, window, cap, scale,
+                 valid_from):
+    """The kernel fast path (interpret mode on CPU, Mosaic on TPU).
+
+    Tq == 1 against a longer key set is a cache decode: the
+    content-masked flash-decode kernel reads the stored-position array
+    (correct for ring caches) and, on linear caches (window == 0 means
+    every attention cache spans max_seq, so slot == position),
+    block-skips slots outside [valid_from, cache_pos]. Anything else is
+    a prefill over freshly computed contiguous k/v: the flash kernel's
+    implicit positions match pos_q == pos_k, with valid_from shifted to
+    kernel coordinates by the ops wrapper."""
+    from repro.kernels import ops as kops  # deferred import
+    if q.shape[1] == 1 and k.shape[1] > 1:
+        return kops.decode_attention(q, k, v, pos_k, pos_q[0], valid_from,
+                                     window=window, softcap=cap, scale=scale,
+                                     linear=(window == 0))
+    return kops.flash_attention(q, k, v, pos_q, pos_k, valid_from,
+                                window=window, softcap=cap, scale=scale)
+
+
+# Kernel dispatch registry (DESIGN.md §15). Every impl accepts the same
+# signature — including per-row valid_from — so the serving engine keeps
+# a single jit trace regardless of cfg.attn_impl.
+ATTN_IMPLS = {
+    "naive": _impl_naive,
+    "jax_chunked": _impl_chunked,
+    "pallas": _impl_pallas,
+}
 
 
 def attention(q, k, v, pos_q, pos_k, cfg: ModelConfig, *, window: int,
@@ -213,20 +283,36 @@ def attention(q, k, v, pos_q, pos_k, cfg: ModelConfig, *, window: int,
     if impl == "auto":
         impl = "naive" if Tq * Tk <= 4096 * 4096 and Tq > 1 else (
             "naive" if Tq == 1 else "jax_chunked")
-    if impl == "pallas":
-        if valid_from is not None:
-            raise NotImplementedError(
-                "per-row valid_from masking is not supported by the pallas "
-                "attention kernel; use attn_impl='naive'/'jax_chunked'")
-        from repro.kernels import ops as kops  # deferred: TPU-only path
-        return kops.flash_attention(q, k, v, pos_q, pos_k, window=window,
-                                    softcap=cap, scale=scale)
-    if impl == "jax_chunked" and Tq > 1:
-        return attention_chunked(q, k, v, pos_q, pos_k, window=window, cap=cap,
-                                 scale=scale, chunk_q=cfg.attn_chunk,
-                                 chunk_k=cfg.attn_chunk, valid_from=valid_from)
-    return attention_naive(q, k, v, pos_q, pos_k, window=window, cap=cap,
-                           scale=scale, valid_from=valid_from)
+    try:
+        fn = ATTN_IMPLS[impl]
+    except KeyError:
+        raise ValueError(
+            f"unknown attn_impl {impl!r}; valid impls: "
+            f"{', '.join(sorted(ATTN_IMPLS))} (or 'auto')") from None
+    return fn(q, k, v, pos_q, pos_k, cfg, window=window, cap=cap,
+              scale=scale, valid_from=valid_from)
+
+
+def _proj(x, w, spec: str):
+    """Projection dispatch (DESIGN.md §15): fp32/bf16 weight leaves run
+    the given einsum; int8 execution leaves ({"q","scale"} dicts from
+    `quant.int8.quantize_exec_tree`) dispatch to the int8 matmul kernel,
+    so quantized zoo candidates get real int8 compute instead of a
+    dequantized-fp32 round-trip. x's leading two axes are (batch, seq);
+    every trailing x axis contracts against w's leading axes, so the
+    flattened (B*T, K) @ (K, N) kernel call covers qkv (d -> (H, hd)),
+    the output projection ((H, hd) -> d) and both MLP matmuls."""
+    if isinstance(w, dict):
+        from repro.kernels import ops as kops  # deferred import
+        B, T = x.shape[0], x.shape[1]
+        nc = x.ndim - 2                         # contracted x axes
+        out_shape = w["q"].shape[nc:]
+        x2 = x.reshape(B * T, -1)
+        w2 = w["q"].reshape(x2.shape[1], -1)
+        s2 = w["scale"].reshape(-1)
+        out = kops.int8_matmul(x2, w2, s2).astype(x.dtype)
+        return out.reshape((B, T) + out_shape)
+    return jnp.einsum(spec, x, w)
 
 
 def attn_block(p, x, cfg: ModelConfig, kind: str, positions,
@@ -249,9 +335,9 @@ def attn_block(p, x, cfg: ModelConfig, kind: str, positions,
     h = rms_norm(x, p["ln1"], eps)
     B, T, _ = h.shape
     Hq, KV, hd = cfg.q_heads_padded, cfg.n_kv_heads, cfg.head_dim
-    q = jnp.einsum("btd,dhk->bthk", h, p["wq"])
-    k = jnp.einsum("btd,dhk->bthk", h, p["wk"])
-    v = jnp.einsum("btd,dhk->bthk", h, p["wv"])
+    q = _proj(h, p["wq"], "btd,dhk->bthk")
+    k = _proj(h, p["wk"], "btd,dhk->bthk")
+    v = _proj(h, p["wv"], "btd,dhk->bthk")
     # Per-arch lever (§Perf): pinning q/k/v head-sharded stops GSPMD from
     # replicating attention over the model axis. On dense archs (whose
     # MLP anchors the propagation) it HURT (~2x gather/RS ping-pong); on
@@ -278,14 +364,12 @@ def attn_block(p, x, cfg: ModelConfig, kind: str, positions,
         # Sequence-sharded cache (kv < tp): explicit distributed
         # flash-decode — masked local cache write + partial-softmax merge
         # (GSPMD's generic handling all-gathered the cache per layer).
-        if valid_from is not None:
-            raise NotImplementedError(
-                "valid_from masking is not supported on the sharded "
-                "flash-decode path")
+        # valid_from folds into the per-shard content mask before the
+        # partial-softmax stats merge.
         from repro.models.flash_decode import flash_decode_sharded
         out, ckn, cvn, cpn = flash_decode_sharded(
             q, k, v, cache["k"], cache["v"], cache["pos"], cache_pos,
-            cfg, parallel, window=window)
+            cfg, parallel, window=window, valid_from=valid_from)
         new_cache = {"k": ckn, "v": cvn, "pos": cpn}
     elif cache is not None and T == 1:
         # Decode: ring-buffer write. Windowed layers allocate S == window so
@@ -327,7 +411,7 @@ def attn_block(p, x, cfg: ModelConfig, kind: str, positions,
     if out is None:
         out = attention(q, k, v, pos_q, pos_k, cfg, window=window,
                         valid_from=valid_from)
-    out = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+    out = _proj(out, p["wo"], "bthk,hkd->btd")
     if cfg.sandwich_norm:
         out = rms_norm(out, p["post_attn_norm"], eps)
     x = x + out
@@ -349,9 +433,9 @@ def attn_block(p, x, cfg: ModelConfig, kind: str, positions,
 def mlp(p, x, cfg: ModelConfig):
     act = act_fn(cfg.mlp_act)
     if cfg.mlp_gated:
-        u = jnp.einsum("btd,df->btf", x, p["w_up"])
-        g = jnp.einsum("btd,df->btf", x, p["w_gate"])
+        u = _proj(x, p["w_up"], "btd,df->btf")
+        g = _proj(x, p["w_gate"], "btd,df->btf")
         h = act(g) * u
     else:
-        h = act(jnp.einsum("btd,df->btf", x, p["w_up"]))
-    return jnp.einsum("btf,fd->btd", h, p["w_down"])
+        h = act(_proj(x, p["w_up"], "btd,df->btf"))
+    return _proj(h, p["w_down"], "btf,fd->btd")

@@ -8,8 +8,11 @@ from repro.quant.int8 import (
     dequantize_int8,
     quantize_tree,
     dequantize_tree,
+    quantize_exec_tree,
+    tree_bytes_quantized,
     ef_compress,
 )
 
 __all__ = ["quantize_int8", "dequantize_int8", "quantize_tree",
-           "dequantize_tree", "ef_compress"]
+           "dequantize_tree", "quantize_exec_tree",
+           "tree_bytes_quantized", "ef_compress"]

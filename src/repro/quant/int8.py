@@ -51,6 +51,55 @@ def dequantize_tree(tree, like=None):
     return out
 
 
+# Projection leaves the int8 matmul kernel can consume, with the number
+# of trailing *output* axes per key (everything before them — minus a
+# leading scan-stack axis — contracts): qkv map d -> (H, hd); wo maps
+# (H, hd) -> d; the MLP matmuls are plain 2D.
+PROJ_OUT_AXES = {"wq": 2, "wk": 2, "wv": 2, "wo": 1,
+                 "w_up": 1, "w_gate": 1, "w_down": 1}
+
+
+def _quantize_matmul(w, out_axes: int, stacked: bool):
+    """Matmul-layout int8: one fp32 scale per output channel (the
+    trailing `out_axes` axes), amax over the contraction axes — the
+    layout `kernels.int8_matmul` needs after flattening to (K, N).
+    `quantize_int8`'s axis=-1 scales (one per contraction row) cannot be
+    folded into C = X @ Wq post-hoc; this can."""
+    red = tuple(range(1 if stacked else 0, w.ndim - out_axes))
+    xf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=red, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale}
+
+
+def quantize_exec_tree(params):
+    """Execution-layout quantization for the serving fast path: every
+    projection matmul weight becomes a {"q" int8, "scale" f32} dict leaf
+    that stays resident (no dequantized copy) and is dispatched to the
+    int8 matmul kernel by `models.layers._proj`. Embeddings and norms
+    stay fp32 (the embedding is a gather and doubles as the tied
+    unembed, which needs the transposed layout). Works on the model's
+    {"blocks": stacked, "tail": unstacked} param tree; leaves it
+    otherwise structurally identical, so jit entry points and lax.scan
+    slicing are unchanged."""
+    def walk(d, stacked):
+        out = {}
+        for key, val in d.items():
+            if key in PROJ_OUT_AXES and hasattr(val, "dtype"):
+                out[key] = _quantize_matmul(val, PROJ_OUT_AXES[key], stacked)
+            elif isinstance(val, dict):
+                out[key] = walk(val, stacked)
+            else:
+                out[key] = val
+        return out
+
+    out = dict(params)
+    out["blocks"] = tuple(walk(b, True) for b in params["blocks"])
+    out["tail"] = tuple(walk(b, False) for b in params["tail"])
+    return out
+
+
 def ef_compress(x, residual, axis: int = -1):
     """Error-feedback quantization step.
 

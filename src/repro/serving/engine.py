@@ -236,6 +236,15 @@ class InferenceEngine:
         """Decode steps left before the cache fills."""
         return max(0, self.max_seq - self.cache_pos)
 
+    @property
+    def resident_bytes(self) -> int:
+        """Bytes of the LIVE parameter tree — int8 execution leaves
+        count at one byte per weight (plus their fp32 scales), so the
+        memory budget the ModelZoo enforces reflects what this engine
+        actually holds, not a notional quantized copy."""
+        from repro.quant.int8 import tree_bytes_quantized
+        return tree_bytes_quantized(self.params)
+
     def generate(self, prompts: np.ndarray, n_tokens: int,
                  greedy: bool = True, rng: Optional[np.random.Generator] = None,
                  lengths=None):
@@ -284,4 +293,5 @@ class InferenceEngine:
         return {"mu": float(np.mean(tot_c)),
                 "sigma": float(np.std(tot_c)),
                 "prefill_ms": float(np.mean(pre_c)),
-                "per_token_ms": float(np.mean(dec_c) / max(1, n_tokens))}
+                "per_token_ms": float(np.mean(dec_c) / max(1, n_tokens)),
+                "resident_bytes": self.resident_bytes}

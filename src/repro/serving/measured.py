@@ -20,10 +20,8 @@ from repro.configs import reduced_config
 from repro.configs.paper_zoo import MEASURED_ZOO, measured_zoo_names
 from repro.core.selection import ModelProfile
 from repro.models import init_params
-from repro.quant.int8 import dequantize_tree, quantize_tree, \
-    tree_bytes_quantized
+from repro.quant.int8 import quantize_exec_tree
 from repro.serving.engine import InferenceEngine
-from repro.utils import tree_bytes
 
 
 @dataclass
@@ -37,35 +35,40 @@ class MeasuredModel:
 
 
 def build_model(name: str, *, batch_size: int = 4, max_seq: int = 64,
-                seed: int = 0) -> MeasuredModel:
+                seed: int = 0, attn_impl: str = "pallas") -> MeasuredModel:
+    """Build one zoo engine. attn_impl defaults to the pallas fast path
+    (valid_from-masked flash/decode kernels — interpret mode on CPU);
+    'naive'/'jax_chunked' keep the reference paths for A/B runs
+    (benchmarks/measured_serving.py). int8 candidates hold their weights
+    as resident (int8, scale) execution trees — projection matmuls run
+    the int8 kernel, and size_bytes is the bytes this engine actually
+    holds (no dequantized fp32 round-trip)."""
     spec = MEASURED_ZOO[name]
     cfg = reduced_config(spec["arch"])
     cfg = dataclasses.replace(cfg, d_model=spec["d_model"],
-                              d_ff=spec["d_ff"], n_layers=spec["n_layers"])
+                              d_ff=spec["d_ff"], n_layers=spec["n_layers"],
+                              attn_impl=attn_impl)
     params = init_params(cfg, jax.random.PRNGKey(seed))
-    size = tree_bytes(params)
     if spec["quant"] == "int8":
-        # Real quantization error in the weights (round-trip through
-        # int8), real storage accounting for the memory budget.
-        q = quantize_tree(params, min_size=256)
-        size = tree_bytes_quantized(q)
-        params = dequantize_tree(q, like=params)
+        params = quantize_exec_tree(params)
     engine = InferenceEngine(cfg, params, batch_size=batch_size,
                              max_seq=max_seq)
     return MeasuredModel(name=name, engine=engine,
-                         accuracy=spec["accuracy"], size_bytes=size,
+                         accuracy=spec["accuracy"],
+                         size_bytes=engine.resident_bytes,
                          quant=spec["quant"])
 
 
 def build_zoo(names=None, *, batch_size: int = 4, max_seq: int = 64,
-              seed: int = 0) -> Dict[str, MeasuredModel]:
+              seed: int = 0, attn_impl: str = "pallas"
+              ) -> Dict[str, MeasuredModel]:
     """{name: MeasuredModel} for the requested zoo subset, in registry
     order. Engines share batch/seq geometry so one batcher config fits
     all; params are seeded per model (seed + registry index)."""
     out = {}
     for i, n in enumerate(measured_zoo_names(names)):
         out[n] = build_model(n, batch_size=batch_size, max_seq=max_seq,
-                             seed=seed + i)
+                             seed=seed + i, attn_impl=attn_impl)
     return out
 
 

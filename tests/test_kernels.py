@@ -92,6 +92,119 @@ def test_decode_attention_window(rng):
                                atol=2e-5)
 
 
+# -- valid_from masking (block_q = block_k = 16 everywhere below) -----------
+#
+# The batch covers every block-boundary case at once: vf=0 (no-op),
+# vf=7 (mid-block), vf=16 (exact block edge: block 0 skippable), and a
+# fully-masked row (vf past every attendable key -> exact zeros).
+
+def _qkv(rng, B, T, Hq, KV, hd, dtype=jnp.float32):
+    q = jnp.asarray(rng.normal(size=(B, T, Hq, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, T, KV, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, T, KV, hd)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("win,cap", [(0, 0.0), (24, 0.0), (0, 30.0)])
+def test_flash_attention_valid_from_vs_ref(win, cap, rng):
+    B, Hq, KV, T, hd = 4, 4, 2, 48, 16
+    q, k, v = _qkv(rng, B, T, Hq, KV, hd)
+    vf = jnp.asarray([0, 7, 16, T], jnp.int32)
+    out = ops.flash_attention_btHd(q, k, v, vf, window=win, softcap=cap,
+                                   block_q=16, block_k=16)
+    ref = R.flash_attention_ref(jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+                                jnp.moveaxis(v, 2, 1), window=win, cap=cap,
+                                valid_from=vf)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jnp.moveaxis(ref, 1, 2)),
+                               atol=1e-5, rtol=1e-5)
+    # Fully-masked row: every query attends to nothing -> exact zeros.
+    assert not np.asarray(out[3]).any()
+
+
+def test_flash_attention_valid_from_zero_bit_identical(rng):
+    """vf=0 must be bitwise equal to the unmasked kernel — engines keep
+    one jit trace by always passing an array (PR 7 pin, now in-kernel)."""
+    B, Hq, KV, T, hd = 2, 4, 2, 48, 16
+    q, k, v = _qkv(rng, B, T, Hq, KV, hd)
+    a = ops.flash_attention_btHd(q, k, v, block_q=16, block_k=16)
+    b = ops.flash_attention_btHd(q, k, v, jnp.zeros((B,), jnp.int32),
+                                 block_q=16, block_k=16)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_flash_attention_valid_from_offset_positions(rng):
+    """The ops wrapper rebases absolute valid_from into kernel
+    coordinates (pos_k[0] shift) — the backfill prefill_row path."""
+    B, Hq, KV, T, hd, off = 1, 2, 2, 32, 16, 64
+    q, k, v = _qkv(rng, B, T, Hq, KV, hd)
+    pos = jnp.arange(off, off + T, dtype=jnp.int32)
+    vf = jnp.asarray([off + 9], jnp.int32)
+    out = ops.flash_attention(q, k, v, pos, pos, vf)
+    ref = R.flash_attention_ref(jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+                                jnp.moveaxis(v, 2, 1),
+                                valid_from=jnp.asarray([9], jnp.int32))
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jnp.moveaxis(ref, 1, 2)),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("ring", [False, True])
+def test_decode_attention_valid_from_vs_ref(ring, rng):
+    B, Hq, KV, S, hd = 4, 4, 2, 64, 16
+    cache_pos = 40
+    q = jnp.asarray(rng.normal(size=(B, 1, Hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    if ring:
+        pos = jnp.asarray((np.arange(S) + 17) % 61, jnp.int32)
+        pos = jnp.where(pos <= cache_pos, pos, -1)
+    else:
+        pos = jnp.asarray(np.where(np.arange(S) <= cache_pos,
+                                   np.arange(S), -1), jnp.int32)
+    # vf=41 > cache_pos: nothing attendable -> exact zeros.
+    vf = jnp.asarray([0, 7, 16, 41], jnp.int32)
+    out = ops.decode_attention(q, k, v, pos, jnp.int32(cache_pos), vf,
+                               block_s=16, linear=not ring)
+    ref = R.decode_attention_ref(q[:, 0], jnp.moveaxis(k, 2, 1),
+                                 jnp.moveaxis(v, 2, 1), pos, cache_pos,
+                                 valid_from=vf)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+    assert not np.asarray(out[3]).any()
+
+
+def test_decode_attention_valid_from_zero_bit_identical(rng):
+    B, Hq, KV, S, hd = 2, 4, 2, 64, 16
+    q = jnp.asarray(rng.normal(size=(B, 1, Hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    pos = jnp.asarray(np.arange(S), jnp.int32)
+    a = ops.decode_attention(q, k, v, pos, jnp.int32(50), block_s=16,
+                             linear=True)
+    b = ops.decode_attention(q, k, v, pos, jnp.int32(50),
+                             jnp.zeros((B,), jnp.int32), block_s=16,
+                             linear=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_decode_attention_block_skip_matches_full_scan(rng):
+    """linear=True enables the early block skip; the ring path (no skip)
+    over the same linear cache must agree to the last ulp — the skipped
+    blocks contribute exactly nothing."""
+    B, Hq, KV, S, hd = 2, 4, 2, 64, 16
+    q = jnp.asarray(rng.normal(size=(B, 1, Hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    pos = jnp.asarray(np.arange(S), jnp.int32)
+    vf = jnp.asarray([33, 18], jnp.int32)
+    skip = ops.decode_attention(q, k, v, pos, jnp.int32(50), vf,
+                                block_s=16, linear=True)
+    full = ops.decode_attention(q, k, v, pos, jnp.int32(50), vf,
+                                block_s=16, linear=False)
+    np.testing.assert_array_equal(np.asarray(skip), np.asarray(full))
+
+
 @pytest.mark.parametrize("mnk", [(32, 48, 64), (64, 80, 96), (16, 16, 128)])
 @pytest.mark.parametrize("dtype", DTYPES)
 def test_int8_matmul_vs_ref(mnk, dtype, rng):

@@ -64,6 +64,55 @@ def test_chunked_equals_naive(rng):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
 
 
+def test_chunked_valid_from_skip_equals_naive(rng):
+    """The chunked path's whole-KV-chunk early skip (chunks entirely
+    below min(valid_from)) changes nothing observable: parity with naive
+    at skip-triggering, mid-chunk, and fully-masked valid_from."""
+    B, T, H, hd = 3, 24, 4, 8
+    q = jnp.asarray(rng.normal(size=(B, T, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, 2, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, 2, hd)), jnp.float32)
+    pos = jnp.arange(T)
+    # min(vf)=10 with chunk_k=5: KV chunks 0 and 1 are skipped outright.
+    vf = jnp.asarray([10, 13, T], jnp.int32)
+    a = L.attention_naive(q, k, v, pos, pos, window=0, cap=0.0, scale=0.3,
+                          valid_from=vf)
+    b = L.attention_chunked(q, k, v, pos, pos, window=0, cap=0.0,
+                            scale=0.3, chunk_q=7, chunk_k=5, valid_from=vf)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    assert not np.asarray(b[2]).any()       # fully-masked row -> zeros
+
+
+def test_attention_impl_registry_parity(rng):
+    """Every registered impl produces the same masked attention through
+    the public dispatcher."""
+    cfg = base_cfg(attn_chunk=8)
+    B, T, hd = 2, 16, 8
+    q = jnp.asarray(rng.normal(size=(B, T, 4, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, 4, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, 4, hd)), jnp.float32)
+    pos = jnp.arange(T)
+    vf = jnp.asarray([0, 5], jnp.int32)
+    import dataclasses
+    outs = {}
+    for impl in sorted(L.ATTN_IMPLS):
+        c = dataclasses.replace(cfg, attn_impl=impl)
+        outs[impl] = np.asarray(L.attention(q, k, v, pos, pos, c, window=0,
+                                            valid_from=vf))
+    for impl, out in outs.items():
+        np.testing.assert_allclose(out, outs["naive"], atol=2e-5,
+                                   err_msg=impl)
+
+
+def test_attention_unknown_impl_lists_valid_impls(rng):
+    import dataclasses
+    cfg = dataclasses.replace(base_cfg(), attn_impl="flashinfer")
+    q = jnp.zeros((1, 4, 4, 8), jnp.float32)
+    pos = jnp.arange(4)
+    with pytest.raises(ValueError, match=r"jax_chunked, naive, pallas"):
+        L.attention(q, q, q, pos, pos, cfg, window=0)
+
+
 def test_softcap_bounds():
     x = jnp.linspace(-1000, 1000, 101)
     y = L.softcap(x, 30.0)

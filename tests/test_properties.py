@@ -293,6 +293,44 @@ def test_error_feedback_unbiased_accumulation(seed, steps):
     assert float(np.abs(np.asarray(resid)).max()) < 0.1  # one-step error
 
 
+# -- masked flash kernel vs naive attention (from test_kernels.py) ---------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 3),
+    t=st.integers(4, 24),
+    window=st.sampled_from([0, 8]),
+    edge=st.booleans(),
+)
+def test_flash_valid_from_matches_naive(seed, b, t, window, edge):
+    """flash(valid_from) == naive(valid_from) for arbitrary per-row
+    valid_from in [0, T] — including rows masked past every key (exact
+    zeros) and, when edge, values pinned to block boundaries so the
+    early-skip path is exercised."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.models.layers import attention_naive
+
+    rng = np.random.default_rng(seed)
+    hq, kv, hd = 4, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, t, hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, t, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, t, kv, hd)), jnp.float32)
+    vf_np = rng.integers(0, t + 1, size=b)
+    if edge:
+        vf_np = np.minimum((vf_np // 8) * 8, t)
+    vf = jnp.asarray(vf_np, jnp.int32)
+    pos = jnp.arange(t, dtype=jnp.int32)
+    flash = ops.flash_attention_btHd(q, k, v, vf, window=window,
+                                     block_q=8, block_k=8)
+    naive = attention_naive(q, k, v, pos, pos, window=window, cap=0.0,
+                            scale=hd ** -0.5, valid_from=vf)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(naive),
+                               atol=2e-5, rtol=2e-5)
+
+
 # -- scan engine vs python engine (from test_engine.py) --------------------
 
 @settings(max_examples=20, deadline=None)
