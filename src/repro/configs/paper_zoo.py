@@ -191,6 +191,46 @@ FLEET_SCENARIOS = {
 }
 
 
+# SLA classes for multi-tenant cluster serving (serving/cluster.py,
+# DESIGN.md §16; per-tenant SLA-aware selection after ModiPick,
+# arXiv:1909.02053). `t_sla` is the class's end-to-end deadline;
+# `shed_priority` orders load-shedding when the cluster saturates
+# (lower sheds first — bronze traffic falls back on-device before any
+# gold request does).
+TENANT_SLA_CLASSES = {
+    "gold":   dict(t_sla=250.0, shed_priority=2),
+    "silver": dict(t_sla=500.0, shed_priority=1),
+    "bronze": dict(t_sla=1200.0, shed_priority=0),
+}
+
+# Named tenant mixes for `serving.cluster.make_tenants`: each entry is
+# one tenant — a device population (FLEET_SCENARIOS name) under an SLA
+# class, with its share of the cluster's request volume and a staggered
+# burst window (`phase` offsets the tenant's traffic peak as a fraction
+# of the horizon; `burst` is the peak/trough rate ratio). Staggered
+# peaks are what make the shared cluster beat static per-tenant
+# replicas: pinned capacity must cover every tenant's own peak, the
+# cluster reuses idle capacity across peaks.
+TENANT_MIXES = {
+    "consumer_burst": (
+        dict(tenant="gold-flagship", sla_class="gold",
+             fleet="mixed_fleet", weight=0.3, phase=0.0, burst=4.0),
+        dict(tenant="silver-mid", sla_class="silver",
+             fleet="mixed_fleet", weight=0.4, phase=0.4, burst=4.0),
+        dict(tenant="bronze-budget", sla_class="bronze",
+             fleet="lte_outage_fleet", weight=0.3, phase=0.7,
+             burst=4.0),
+    ),
+    "enterprise_degraded": (
+        dict(tenant="gold-field", sla_class="gold",
+             fleet="lte_outage_fleet", weight=0.5, phase=0.0,
+             burst=3.0),
+        dict(tenant="bronze-bulk", sla_class="bronze",
+             fleet="mixed_fleet", weight=0.5, phase=0.5, burst=3.0),
+    ),
+}
+
+
 # Named adaptive-controller presets for `serving.control.make_controller`
 # (`SimConfig.controller`, CNNSelectServer/ServingLoop `controller=`):
 # an ordered mode table (core.selection.CONTROL_MODES names, least ->

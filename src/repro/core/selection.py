@@ -34,6 +34,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.core.registry import parse_spec
+
 _EPS = 1e-9
 
 # Paper's conservative network-time estimate: responses are small text
@@ -514,10 +516,12 @@ def make_mode(spec: Union[str, ControlMode]) -> ControlMode:
     already-built `ControlMode`)."""
     if isinstance(spec, ControlMode):
         return spec
-    if not isinstance(spec, str) or spec not in CONTROL_MODES:
+    if not isinstance(spec, str):
         raise ValueError(f"unknown control mode {spec!r}; known: "
                          f"{', '.join(mode_names())}")
-    return CONTROL_MODES[spec]
+    head, _ = parse_spec(spec, kind="control mode", heads=CONTROL_MODES,
+                         known=mode_names())
+    return CONTROL_MODES[head]
 
 
 # Name -> factory(arg, **options). `arg` is the text after ":" in specs
@@ -545,15 +549,11 @@ def make_policy(spec: Union[str, Policy], *, t_threshold: float = 50.0,
     an already-built Policy) to a Policy instance."""
     if isinstance(spec, Policy):
         return spec
-    head, _, arg = spec.partition(":")
-    if head not in POLICY_REGISTRY:
-        raise ValueError(f"unknown policy {spec!r}; "
-                         f"known: {', '.join(policy_names())}")
-    if head == "static" and not arg:
-        raise ValueError("static policy needs a model name: 'static:<name>'")
-    if head != "static" and arg:
-        raise ValueError(f"policy {head!r} takes no ':{arg}' argument "
-                         f"(only static:<name> does)")
+    head, arg = parse_spec(spec, kind="policy", heads=POLICY_REGISTRY,
+                           known=policy_names(),
+                           arg_heads=("static",),
+                           required_arg_heads=("static",),
+                           arg_desc={"static": ("model name", "name")})
     return POLICY_REGISTRY[head](arg, t_threshold=t_threshold,
                                  stage2_variant=stage2_variant, seed=seed,
                                  chunk=chunk)

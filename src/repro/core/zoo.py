@@ -78,6 +78,22 @@ class ModelZoo:
             return extra_mu
         return float(max(rng.normal(extra_mu, extra_sg + 1e-9), 0.0))
 
+    def evict(self, name: str) -> None:
+        """Force-evict one entry (cluster-wide placement,
+        serving/cluster.py: the placer's global budget decides victims
+        across zoos, then evicts here)."""
+        e = self.entries[name]
+        if e.hot:
+            e.hot = False
+            e.evictions += 1
+
+    def lru_hot(self, exclude=()) -> Optional[ZooEntry]:
+        """The least-recently-used hot entry (eviction candidate),
+        skipping `exclude` names; None when nothing is evictable."""
+        victims = [e for e in self.entries.values()
+                   if e.hot and e.profile.name not in exclude]
+        return min(victims, key=lambda e: e.last_used) if victims else None
+
     def sample_exec(self, name: str, rng: np.random.Generator) -> float:
         p = self.entries[name].profile
         return float(max(rng.normal(p.mu, p.sigma + 1e-9), 0.1 * p.mu))

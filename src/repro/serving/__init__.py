@@ -2,23 +2,28 @@
 (paper §5.2 simulations), the real CPU inference engine with KV-cache
 management and continuous batching, and the CNNSelect-fronted server.
 
-All three serving stacks (batch-of-one server, continuous-batching
-loop, simulator) admit requests through one `Router` (router.py), which
-owns the profile store, cold/warm zoo state, and per-model queues, and
-resolves its selection policy by name from the `core.selection`
-registry. See DESIGN.md §2–3."""
+All serving stacks (batch-of-one server, continuous-batching loop,
+simulated replica, multi-tenant cluster) admit requests through one
+`Router` (router.py), report through one `ServingMetrics` schema
+(metrics.py), and expose one `ServingStack` protocol (stack.py) the
+`Cluster` composes. See DESIGN.md §2–3 and §16."""
 
+from repro.serving.cluster import (Cluster, ClusterPlacer, TenantSpec,
+                                   make_tenant_workload, make_tenants)
 from repro.serving.control import (AdaptiveController, ControlDecision,
                                    ControlPlane, CusumDetector,
                                    PageHinkleyDetector, make_controller,
                                    make_detector)
 from repro.serving.fleet import (DeviceProfile, EstimatorBank,
                                  FleetMixture, make_fleet)
+from repro.serving.metrics import ServingMetrics, group_stats
 from repro.serving.network import (MarkovProcess, NetworkProcess,
                                    StationaryProcess, TInputEstimator,
                                    TraceReplayProcess, make_estimator,
                                    make_network)
 from repro.serving.router import RouteDecision, Router
+from repro.serving.stack import (ServingStack, SimReplicaStack,
+                                 StackOutcome)
 from repro.serving.trace import (CapturedTraceProcess, Trace,
                                  TraceRecorder, load_capture,
                                  requests_from_trace)
@@ -30,4 +35,7 @@ __all__ = ["Router", "RouteDecision", "NetworkProcess",
            "Trace", "TraceRecorder", "CapturedTraceProcess",
            "load_capture", "requests_from_trace", "ControlPlane",
            "ControlDecision", "AdaptiveController", "CusumDetector",
-           "PageHinkleyDetector", "make_controller", "make_detector"]
+           "PageHinkleyDetector", "make_controller", "make_detector",
+           "ServingMetrics", "group_stats", "ServingStack",
+           "StackOutcome", "SimReplicaStack", "Cluster", "ClusterPlacer",
+           "TenantSpec", "make_tenants", "make_tenant_workload"]

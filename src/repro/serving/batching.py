@@ -27,6 +27,10 @@ class Request:
     # Issuing device (fleet serving, DESIGN.md §10): keys the Router's
     # per-device EstimatorBank; None = single shared estimator.
     device_id: Optional[str] = field(compare=False, default=None)
+    # Tenant tag (multi-tenant cluster serving, DESIGN.md §16): names
+    # the device population / SLA class this request bills to; None =
+    # single-tenant stack.
+    tenant: Optional[str] = field(compare=False, default=None)
     # outputs
     tokens: list = field(compare=False, default_factory=list)
     start_exec: float = field(compare=False, default=0.0)

@@ -52,6 +52,7 @@ from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.core.registry import parse_spec
 from repro.core.selection import (ControlMode, Policy, make_mode,
                                   make_policy, on_device_fallback_decision)
 from repro.serving.fleet import EstimatorBank
@@ -243,17 +244,11 @@ def make_detector(spec: Union[str, ChangePointDetector]
     if not isinstance(spec, str):
         raise ValueError(f"detector spec must be a ChangePointDetector "
                          f"or a str, got {type(spec).__name__}")
-    head, _, arg = spec.partition(":")
-    if head not in DETECTOR_REGISTRY:
-        raise ValueError(f"unknown change-point detector {spec!r}; "
-                         f"known: {', '.join(detector_names())}")
-    if arg:
-        try:
-            float(arg)
-        except ValueError:
-            raise ValueError(f"detector {head!r} takes a numeric "
-                             f"threshold, got {spec!r}; known: "
-                             f"{', '.join(detector_names())}") from None
+    head, arg = parse_spec(spec, kind="change-point detector",
+                           heads=DETECTOR_REGISTRY,
+                           known=detector_names(),
+                           arg_heads=tuple(DETECTOR_REGISTRY),
+                           numeric_arg_heads=tuple(DETECTOR_REGISTRY))
     return DETECTOR_REGISTRY[head](arg)
 
 

@@ -17,7 +17,6 @@ host's executed latencies."""
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Union
 
 import numpy as np
@@ -26,59 +25,16 @@ from repro.core.selection import ModelProfile
 from repro.serving.batching import ContinuousBatcher, Request
 from repro.serving.control import ControlPlane
 from repro.serving.engine import InferenceEngine
+from repro.serving.metrics import ServingMetrics
 from repro.serving.router import Router
+from repro.serving.stack import StackOutcome
 
 
-@dataclass
-class LoopMetrics:
-    records: List[dict] = field(default_factory=list)
-
-    def add(self, req: Request, model: str, queue_ms: float,
-            exec_ms: float, mode: Optional[str] = None):
-        e2e = 2 * req.t_input_ms + queue_ms + exec_ms
-        self.records.append({
-            "rid": req.rid, "model": model, "queue_ms": queue_ms,
-            "exec_ms": exec_ms, "e2e_ms": e2e,
-            "device": req.device_id, "mode": mode or "static",
-            "ok": (e2e <= req.sla_ms) if req.sla_ms else True,
-        })
-
-    def summary(self) -> dict:
-        if not self.records:
-            return {}
-        q = np.array([r["queue_ms"] for r in self.records])
-        e = np.array([r["e2e_ms"] for r in self.records])
-        return {
-            "served": len(self.records),
-            "attainment": float(np.mean([r["ok"] for r in self.records])),
-            "mean_queue_ms": float(q.mean()),
-            "p95_queue_ms": float(np.percentile(q, 95)),
-            "mean_e2e_ms": float(e.mean()),
-            "p95_e2e_ms": float(np.percentile(e, 95)),
-        }
-
-    def _group_by(self, field_name: str) -> Dict[str, dict]:
-        """Shared group-by-attainment aggregation over the records."""
-        out: Dict[str, dict] = {}
-        for key in sorted({r[field_name] or "<none>"
-                           for r in self.records}):
-            rs = [r for r in self.records
-                  if (r[field_name] or "<none>") == key]
-            out[key] = {
-                "served": len(rs),
-                "attainment": float(np.mean([r["ok"] for r in rs])),
-                "mean_e2e_ms": float(np.mean([r["e2e_ms"] for r in rs])),
-            }
-        return out
-
-    def per_device(self) -> Dict[str, dict]:
-        """Attainment / queue split by issuing device (fleet traces)."""
-        return self._group_by("device")
-
-    def per_mode(self) -> Dict[str, dict]:
-        """Attainment split by governing control mode (controller runs;
-        one 'static' bucket otherwise)."""
-        return self._group_by("mode")
+class LoopMetrics(ServingMetrics):
+    """The loop's ledger — now the unified `ServingMetrics` schema
+    (serving/metrics.py); kept as a named subclass for imports. The
+    pre-unification ``mean_e2e_ms``/``p95_e2e_ms`` summary keys are now
+    ``mean_ms``/``p95_ms`` (migration note in CHANGES.md)."""
 
 
 class ServingLoop:
@@ -153,29 +109,51 @@ class ServingLoop:
 
     def run(self, requests: List[Request]) -> LoopMetrics:
         ordered = sorted(requests, key=lambda r: r.arrival)
-        if self.router is None:
-            only = next(iter(self.engines))
-            for req in ordered:
-                self.batchers[only].submit(req)
-        elif self.control.controller is None:
+        if self.router is not None and self.control.controller is None:
             # Vectorized admission: one chunked jit call for the trace.
             self.router.submit_many(ordered)
         else:
-            # Adaptive admission: the shared per-request control step
-            # (detect -> maybe switch mode -> estimate -> select), one
-            # request at a time in arrival order — the controller's
-            # decisions are inherently sequential.
+            # Per-request admission (single-engine, or adaptive — the
+            # controller's decisions are inherently sequential).
             for req in ordered:
-                d = self.control.step(req.sla_ms or 1e9,
-                                      req.t_input_ms,
-                                      device_id=req.device_id)
-                self._req_modes[req.rid] = d.mode
-                self.router.enqueue(req, d.name)
-        # Drain each model's queue in arrival order (virtual clock per
-        # model; engines measure real exec time on this host).
+                self.submit(req)
+        self.drain()
+        return self.metrics
+
+    # -- ServingStack (serving/stack.py, DESIGN.md §16) ---------------
+
+    def submit(self, req: Request, *, now: float = 0.0) -> StackOutcome:
+        """Protocol admission: route (through the shared control step
+        when a controller is attached) and queue on the chosen model's
+        batcher; execution and the metrics row land at `drain`."""
+        if self.router is None:
+            only = next(iter(self.engines))
+            self.batchers[only].submit(req)
+            return StackOutcome(model=only, pending=True,
+                                tenant=req.tenant)
+        if self.control.controller is None:
+            d = self.router.submit(req, now=now)
+            return StackOutcome(model=d.name, pending=True,
+                                tenant=req.tenant)
+        # Adaptive: detect -> maybe switch mode -> estimate -> select.
+        d = self.control.step(req.sla_ms or 1e9, req.t_input_ms,
+                              device_id=req.device_id)
+        self._req_modes[req.rid] = d.mode
+        self.router.submit(req, name=d.name)
+        return StackOutcome(model=d.name, mode=d.mode, pending=True,
+                            tenant=req.tenant)
+
+    def drain(self) -> None:
+        """Drain each model's queue in arrival order (virtual clock per
+        model; engines measure real exec time on this host)."""
         for name, batcher in self.batchers.items():
             self._drain(name, batcher)
-        return self.metrics
+
+    def observe_outcome(self, name: str, latency_ms: float, *,
+                        cold: bool = False, now: float = 0.0) -> None:
+        if self.control is not None:
+            self.control.observe_outcome(name, latency_ms, cold=cold,
+                                         now=now)
 
     def _finish(self, r: Request, name: str, exec_ms: float):
         """Per-request completion: metrics row, online profile feedback,

@@ -39,6 +39,7 @@ from repro.configs.paper_zoo import (CAPTURE_SCENARIOS, NETWORK_SCENARIOS,
                                      NETWORK_STATES, NETWORKS,
                                      SYNTHETIC_TRACES, lognormal_params,
                                      synthetic_trace)
+from repro.core.registry import parse_spec
 
 # No network can deliver a request in non-positive time; every process
 # clamps here (unified — previously only the legacy fallback did).
@@ -334,25 +335,31 @@ def make_network(spec: Union[str, NetworkProcess]) -> NetworkProcess:
         return StationaryProcess.named(spec)
     if spec in NETWORK_SCENARIOS:
         return MarkovProcess.from_scenario(spec)
-    head, _, arg = spec.partition(":")
-    if head == "trace" and arg:
-        # Mirror the policy-registry error style: one ValueError naming
-        # every resolvable trace (previously an unknown name surfaced
-        # whatever the synthetic-trace builder raised).
+    # The shared registry grammar (core.registry.parse_spec): the same
+    # unknown/takes-no-arg/needs-arg errors every other factory raises.
+    head, arg = parse_spec(
+        spec, kind="network",
+        heads=list(NETWORKS) + list(NETWORK_SCENARIOS)
+        + ["trace", "capture"],
+        known=sorted(NETWORKS) + sorted(NETWORK_SCENARIOS)
+        + ["trace:<name>", "capture:<name>"],
+        arg_heads=("trace", "capture"),
+        required_arg_heads=("trace", "capture"),
+        arg_desc={"trace": ("trace name", "name"),
+                  "capture": ("capture name", "name")})
+    if head == "trace":
+        # Sub-registry resolution: one ValueError naming every
+        # resolvable trace (synthetic + recorded captures).
         if arg in SYNTHETIC_TRACES:
             return TraceReplayProcess(synthetic_trace(arg), name=spec)
         if arg in CAPTURE_SCENARIOS:
             return _captured_process(arg, spec)
         raise ValueError(f"unknown trace {arg!r}; "
                          f"known: {', '.join(trace_names())}")
-    if head == "capture" and arg:
-        if arg not in CAPTURE_SCENARIOS:
-            raise ValueError(f"unknown capture {arg!r}; known: "
-                             f"{', '.join(sorted(CAPTURE_SCENARIOS))}")
-        return _captured_process(arg, spec)
-    raise ValueError(
-        f"unknown network {spec!r}; known: {sorted(NETWORKS)} + "
-        f"{sorted(NETWORK_SCENARIOS)} + trace:<name> + capture:<name>")
+    if arg not in CAPTURE_SCENARIOS:
+        raise ValueError(f"unknown capture {arg!r}; known: "
+                         f"{', '.join(sorted(CAPTURE_SCENARIOS))}")
+    return _captured_process(arg, spec)
 
 
 # --------------------------------------------------------------------------
@@ -584,22 +591,11 @@ def validate_estimator_spec(spec: str) -> str:
     argument surfaced as whatever the builder raised (an opaque
     `float()` conversion error), and `EstimatorBank` deferred even that
     to the first per-device use mid-run. Returns the head."""
-    head, _, arg = spec.partition(":")
-    if head not in ESTIMATOR_REGISTRY:
-        raise ValueError(f"unknown t_input estimator {spec!r}; known: "
-                         f"{', '.join(estimator_names())}")
-    if arg and head not in _ESTIMATOR_ARG_HEADS:
-        raise ValueError(f"t_input estimator {head!r} takes no "
-                         f"':{arg}' argument; known: "
-                         f"{', '.join(estimator_names())}")
-    if arg:
-        try:
-            float(arg)
-        except ValueError:
-            raise ValueError(
-                f"t_input estimator {head!r} takes a numeric argument, "
-                f"got {spec!r}; known: "
-                f"{', '.join(estimator_names())}") from None
+    head, _ = parse_spec(spec, kind="t_input estimator",
+                         heads=ESTIMATOR_REGISTRY,
+                         known=estimator_names(),
+                         arg_heads=_ESTIMATOR_ARG_HEADS,
+                         numeric_arg_heads=_ESTIMATOR_ARG_HEADS)
     return head
 
 

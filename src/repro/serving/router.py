@@ -13,6 +13,7 @@ vectorized over a whole trace (`route_batch`, which drives the jit'd
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Union
 
@@ -185,11 +186,10 @@ class Router:
             self.current_profiles(), np.asarray(t_sla, np.float64),
             t_input, realized=realized, detail=detail)
 
-    def enqueue(self, req: Request, name: str) -> None:
+    def _admit(self, req: Request, name: str) -> None:
         """Admission bookkeeping for an already-routed request — bind
         the model, queue it, record the admission. One copy shared by
-        `submit`/`submit_many` and the control plane's adaptive
-        admission path (serving/control.py). Requests are the canonical
+        `submit`/`submit_many`. Requests are the canonical
         `batching.Request` — one dataclass end to end, so device_id/sla
         metadata cannot drift between admission and execution."""
         req.model = name
@@ -197,11 +197,28 @@ class Router:
         if self.recorder is not None:
             self.recorder.record_request(req, model=name)
 
-    def submit(self, req: Request, *, now: float = 0.0) -> RouteDecision:
-        """Route one request and enqueue it on its model's queue."""
+    def enqueue(self, req: Request, name: str) -> None:
+        """Deprecated: call ``submit(req, name=name)`` — `submit` is the
+        one canonical admission path (pre-decided admissions included),
+        so admission bookkeeping cannot fork."""
+        warnings.warn(
+            "Router.enqueue is deprecated; use Router.submit(req, "
+            "name=name)", DeprecationWarning, stacklevel=2)
+        self._admit(req, name)
+
+    def submit(self, req: Request, *, now: float = 0.0,
+               name: Optional[str] = None) -> RouteDecision:
+        """The canonical admission path: route one request and enqueue
+        it on its model's queue. A caller that already decided the
+        model (e.g. the control plane's adaptive per-request step,
+        serving/control.py) passes ``name=`` to skip routing and admit
+        directly — same bookkeeping, no second selection."""
+        if name is not None:
+            self._admit(req, name)
+            return RouteDecision(self.order.index(name), name, 0.0)
         d = self.route(req.sla_ms or 1e9, req.t_input_ms, now=now,
                        device_id=req.device_id)
-        self.enqueue(req, d.name)
+        self._admit(req, d.name)
         return d
 
     def submit_many(self, requests: Sequence[Request]) -> List[str]:
@@ -217,6 +234,6 @@ class Router:
         names = []
         for r, i in zip(requests, idx):
             name = self.order[int(i)]
-            self.enqueue(r, name)
+            self._admit(r, name)
             names.append(name)
         return names

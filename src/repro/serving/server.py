@@ -15,7 +15,7 @@ executing in the cloud)."""
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -24,7 +24,9 @@ from repro.core.selection import ModelProfile, Policy
 from repro.serving.batching import Request
 from repro.serving.control import ControlPlane
 from repro.serving.engine import InferenceEngine
+from repro.serving.metrics import ServingMetrics
 from repro.serving.router import Router
+from repro.serving.stack import StackOutcome
 
 
 @dataclass
@@ -35,48 +37,12 @@ class ServedModel:
     size_bytes: int = 0
 
 
-@dataclass
-class ServerMetrics:
-    served: int = 0
-    violations: int = 0
-    latencies_ms: list = field(default_factory=list)
-    accuracies: list = field(default_factory=list)
-    selections: dict = field(default_factory=dict)
-    # device_id -> [served, violations] (fleet traffic; "<none>" for
-    # untagged requests).
-    by_device: dict = field(default_factory=dict)
-    # mode name -> served count (online control; "static" when no
-    # controller is attached).
-    by_mode: dict = field(default_factory=dict)
-    fallbacks: int = 0         # on-device advisories issued
-
-    @property
-    def attainment(self) -> float:
-        return 1.0 - self.violations / max(self.served, 1)
-
-    def record_device(self, device_id, ok: bool):
-        entry = self.by_device.setdefault(device_id or "<none>", [0, 0])
-        entry[0] += 1
-        entry[1] += int(not ok)
-
-    def summary(self) -> dict:
-        lat = np.array(self.latencies_ms) if self.latencies_ms else np.zeros(1)
-        out = {
-            "served": self.served,
-            "attainment": self.attainment,
-            "accuracy": float(np.mean(self.accuracies)) if self.accuracies else 0.0,
-            "mean_ms": float(lat.mean()),
-            "p95_ms": float(np.percentile(lat, 95)),
-            "selections": dict(self.selections),
-        }
-        if self.by_device:
-            out["by_device"] = {
-                d: {"served": n, "attainment": 1.0 - v / max(n, 1)}
-                for d, (n, v) in sorted(self.by_device.items())}
-        if set(self.by_mode) - {"static"}:
-            out["by_mode"] = dict(sorted(self.by_mode.items()))
-            out["fallbacks"] = self.fallbacks
-        return out
+class ServerMetrics(ServingMetrics):
+    """The server's ledger — now the unified `ServingMetrics` schema
+    (serving/metrics.py); kept as a named subclass so `ServerMetrics`
+    imports and `type(server.metrics)()` reconstruction keep working.
+    The pre-unification counter fields live on as deprecated alias
+    properties on the base class."""
 
 
 class CNNSelectServer:
@@ -146,21 +112,14 @@ class CNNSelectServer:
         d = self.control.step(
             t_sla, req.t_input_ms, device_id=req.device_id,
             on_device_ms=self.on_device_ms.get(req.device_id or "", 0.0))
-        self.metrics.by_mode[d.mode] = \
-            self.metrics.by_mode.get(d.mode, 0) + 1
         if d.fallback:
             # On-device advisory: the device serves locally; no upload,
             # no cloud execution. Charged the device's known local
             # latency.
             e2e = self.on_device_ms[req.device_id or ""]
             ok = e2e <= t_sla
-            self.metrics.served += 1
-            self.metrics.violations += int(not ok)
-            self.metrics.latencies_ms.append(e2e)
-            self.metrics.fallbacks += 1
-            self.metrics.selections[d.name] = \
-                self.metrics.selections.get(d.name, 0) + 1
-            self.metrics.record_device(req.device_id, ok)
+            self.metrics.add(req, d.name, mode=d.mode, e2e_ms=e2e,
+                             ok=ok, fallback=True)
             if self.recorder is not None:
                 self.recorder.record_request(req, model=d.name,
                                              sla_ok=ok)
@@ -177,15 +136,30 @@ class CNNSelectServer:
         self.control.observe_outcome(name, exec_ms)
         e2e = req.t_input_ms * 2.0 + exec_ms
         ok = e2e <= t_sla
-        self.metrics.served += 1
-        self.metrics.violations += int(not ok)
-        self.metrics.latencies_ms.append(e2e)
-        self.metrics.accuracies.append(m.accuracy)
-        self.metrics.selections[name] = self.metrics.selections.get(name, 0) + 1
-        self.metrics.record_device(req.device_id, ok)
+        self.metrics.add(req, name, exec_ms=exec_ms, mode=d.mode,
+                         e2e_ms=e2e, ok=ok, accuracy=m.accuracy)
         if self.recorder is not None:
             self.recorder.record_request(req, model=name, sla_ok=ok,
                                          exec_ms=exec_ms)
         return {"model": name, "e2e_ms": e2e, "ok": ok,
                 "device": req.device_id, "mode": d.mode,
                 "tokens": toks[0].tolist()}
+
+    # -- ServingStack (serving/stack.py, DESIGN.md §16) ---------------
+
+    def submit(self, req: Request, *, now: float = 0.0) -> StackOutcome:
+        """Protocol admission: serve inline against the request's own
+        SLA (``sla_ms == 0`` means no SLA)."""
+        rec = self.handle(req, t_sla=req.sla_ms or 1e9)
+        return StackOutcome(
+            model=rec["model"], mode=rec["mode"], e2e_ms=rec["e2e_ms"],
+            ok=rec["ok"], tenant=req.tenant,
+            fallback=rec["model"] == "<on-device>")
+
+    def drain(self) -> None:
+        """Batch-of-one execution — nothing queued across submits."""
+
+    def observe_outcome(self, name: str, latency_ms: float, *,
+                        cold: bool = False, now: float = 0.0) -> None:
+        self.control.observe_outcome(name, latency_ms, cold=cold,
+                                     now=now)

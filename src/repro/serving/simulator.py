@@ -40,6 +40,7 @@ from repro.core.selection import ModelProfile, Policy
 from repro.serving.control import (HEDGE_MODES, AdaptiveController,
                                    ControlPlane, make_controller)
 from repro.serving.fleet import EstimatorBank, FleetMixture, make_fleet
+from repro.serving.metrics import group_stats
 from repro.serving.network import (NetworkProcess, TInputEstimator,
                                    make_estimator, make_network)
 from repro.serving.router import Router
@@ -147,6 +148,46 @@ class SimResult:
     modes: Optional[np.ndarray] = None         # (N,) int64 mode index
     mode_names: Optional[Sequence[str]] = None
     switch_events: Optional[List[dict]] = None
+    # Model names in selection-index order (set by `simulate`); lets
+    # `summary()` report name-keyed selections like the other stacks.
+    model_names: Optional[Sequence[str]] = None
+
+    def summary(self) -> dict:
+        """The unified serving summary schema (serving/metrics.py) over
+        this run — same keys as `ServingMetrics.summary()`; queueing is
+        folded into latency here, so the queue columns report 0."""
+        sel: Dict[str, int] = {}
+        if self.model_names is not None:
+            counts = np.bincount(self.selections[self.selections >= 0],
+                                 minlength=len(self.model_names))
+            sel = {n: int(c)
+                   for n, c in zip(self.model_names, counts) if c}
+            n_fb = int((self.selections < 0).sum())
+            if n_fb:
+                sel["<on-device>"] = n_fb
+        out = {
+            "served": int(len(self.latencies)),
+            "attainment": self.attainment,
+            "accuracy": self.accuracy,
+            "mean_ms": self.mean_latency,
+            "p95_ms": self.p95_latency,
+            "mean_queue_ms": 0.0,
+            "p95_queue_ms": 0.0,
+            "selections": sel,
+        }
+        if self.device_index is not None:
+            out["by_device"] = self.per_device()
+        if self.modes is not None:
+            out["by_mode"] = self.per_mode()
+            out["fallbacks"] = self.fallbacks
+        if self.hedges:
+            out["hedges"] = self.hedges
+        return out
+
+    def per_tenant(self) -> Dict[str, Dict[str, float]]:
+        """Schema parity with `ServingMetrics` — the simulator is
+        single-tenant, so always empty."""
+        return {}
 
     def selection_histogram(self, names: Sequence[str]) -> Dict[str, float]:
         cloud = self.selections[self.selections >= 0]
@@ -159,28 +200,13 @@ class SimResult:
 
     def _group_stats(self, index: np.ndarray, names: Sequence[str],
                      extras: Sequence = ()) -> Dict[str, Dict[str, float]]:
-        """The one group-by-attainment aggregation behind
-        `per_regime` / `per_device` / `per_mode`: bucket requests by an
-        (N,) integer index, report share / attainment / mean latency
-        (+ accuracy when recorded) per named bucket. `extras` adds
-        ``(label, (N,) array)`` mean columns; a None array is skipped."""
-        out: Dict[str, Dict[str, float]] = {}
-        for k, name in enumerate(names):
-            mask = index == k
-            if not mask.any():
-                continue
-            d = {
-                "share": float(mask.mean()),
-                "attainment": float(1.0 - self.violations[mask].mean()),
-                "mean_latency": float(self.latencies[mask].mean()),
-            }
-            if self.accuracies is not None:
-                d["accuracy"] = float(self.accuracies[mask].mean())
-            for label, arr in extras:
-                if arr is not None:
-                    d[label] = float(np.asarray(arr)[mask].mean())
-            out[name] = d
-        return out
+        """Delegates to the shared `serving.metrics.group_stats` — the
+        one group-by-attainment aggregation behind `per_regime` /
+        `per_device` / `per_mode` here and the record-based
+        `ServingMetrics` groupers."""
+        return group_stats(index, names, violations=self.violations,
+                           latencies=self.latencies,
+                           accuracies=self.accuracies, extras=extras)
 
     def per_regime(self) -> Dict[str, Dict[str, float]]:
         """Attainment / accuracy / latency split by network regime
@@ -485,6 +511,7 @@ def _assemble_result(cfg, plan, lat, sel, hedges, fallbacks, zoo,
         modes=plan.modes,
         mode_names=plan.mode_names,
         switch_events=plan.events or None,
+        model_names=[p.name for p in profiles],
     )
 
 

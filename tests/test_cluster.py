@@ -1,0 +1,228 @@
+"""Multi-tenant cluster control plane (serving/cluster.py, DESIGN.md §16):
+tenant workloads, cluster-wide placement/eviction, scaling, shedding,
+hedging — and the replay pins: the placement/eviction/scale/shed event
+log must reproduce bit-for-bit from a captured trace.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_zoo import (TENANT_MIXES, TENANT_SLA_CLASSES,
+                                     paper_profiles)
+from repro.serving.batching import Request
+from repro.serving.cluster import (Cluster, ClusterPlacer, TenantSpec,
+                                   capture_run, make_tenant_workload,
+                                   make_tenants,
+                                   requests_from_cluster_trace,
+                                   replay_events)
+from repro.serving.stack import SimReplicaStack
+
+MODELS = ["mobilenetv1_025", "mobilenetv1_10", "inceptionv3"]
+
+
+def _replicas(n=3, seed=100):
+    return [SimReplicaStack(paper_profiles(MODELS), seed=seed + i,
+                            name=f"r{i}") for i in range(n)]
+
+
+def _cluster(mix="consumer_burst", budget=int(250e6), **kw):
+    return Cluster(_replicas(), mix, memory_budget_bytes=budget, **kw)
+
+
+# -- tenants and workloads -------------------------------------------------
+
+def test_tenant_spec_validation():
+    with pytest.raises(ValueError, match="unknown SLA class"):
+        TenantSpec("t", "platinum")
+    with pytest.raises(ValueError, match="weight must be positive"):
+        TenantSpec("t", "gold", weight=0.0)
+    with pytest.raises(ValueError, match="unknown tenant mix"):
+        make_tenants("nope")
+    with pytest.raises(ValueError, match="duplicate tenant names"):
+        make_tenants([TenantSpec("t", "gold"), TenantSpec("t", "bronze")])
+
+
+def test_tenant_mixes_registry():
+    for mix in TENANT_MIXES:
+        tenants = make_tenants(mix)
+        assert len(tenants) >= 2
+        for t in tenants:
+            assert t.sla_class in TENANT_SLA_CLASSES
+            assert t.t_sla > 0
+
+
+def test_workload_deterministic_and_tagged():
+    a = make_tenant_workload("consumer_burst", n_requests=200,
+                             rate_hz=20.0, seed=3)
+    b = make_tenant_workload("consumer_burst", n_requests=200,
+                             rate_hz=20.0, seed=3)
+    assert [(r.arrival, r.device_id, r.t_input_ms) for r in a] \
+        == [(r.arrival, r.device_id, r.t_input_ms) for r in b]
+    assert [r.rid for r in a] == list(range(len(a)))
+    assert all(r.arrival <= s.arrival for r, s in zip(a, a[1:]))
+    tenants = {t.name: t for t in make_tenants("consumer_burst")}
+    for r in a:
+        assert r.tenant in tenants
+        assert r.device_id.startswith(r.tenant + "/")
+        assert r.sla_ms == tenants[r.tenant].t_sla
+    c = make_tenant_workload("consumer_burst", n_requests=200,
+                             rate_hz=20.0, seed=4)
+    assert [r.arrival for r in a] != [r.arrival for r in c]
+
+
+def test_workload_bursts_cluster_around_phase():
+    # burst=4 in a 0.25-wide window centred at phase: the peak quarter
+    # of the horizon must hold well over its uniform share.
+    reqs = make_tenant_workload(
+        [dict(tenant="t", sla_class="bronze", phase=0.5, burst=4.0)],
+        n_requests=400, rate_hz=40.0, seed=0)
+    horizon = 400 / 40.0 * 1000.0
+    arr = np.array([r.arrival for r in reqs])
+    frac = ((np.abs(arr / horizon - 0.5) < 0.125).mean())
+    assert frac > 0.4          # uniform share would be 0.25
+
+
+# -- cluster-wide placement ------------------------------------------------
+
+def test_placer_evicts_global_lru():
+    reps = _replicas(2)
+    placer = ClusterPlacer(reps, memory_budget_bytes=int(120e6))
+    # Heat inceptionv3 (95MB) on r0 at t=0, then on r1 at t=1: the
+    # global budget fits only one copy, so r0's (older) is evicted.
+    placer.ensure_hot(reps[0], "inceptionv3", 0.0)
+    assert reps[0].router.zoo.entries["inceptionv3"].hot
+    placer.ensure_hot(reps[1], "inceptionv3", 1.0)
+    assert not reps[0].router.zoo.entries["inceptionv3"].hot
+    assert reps[1].router.zoo.entries["inceptionv3"].hot
+    kinds = [(e["kind"], e["replica"], e["model"]) for e in placer.events]
+    assert kinds == [("place", 0, "inceptionv3"),
+                     ("evict", 0, "inceptionv3"),
+                     ("place", 1, "inceptionv3")]
+
+
+def test_placer_never_evicts_the_copy_being_heated():
+    reps = _replicas(1)
+    placer = ClusterPlacer(reps, memory_budget_bytes=int(1e6))
+    # Budget below the model size: nothing else to evict, model still
+    # heats (the zoo's over-budget escape hatch).
+    placer.ensure_hot(reps[0], "inceptionv3", 0.0)
+    assert reps[0].router.zoo.entries["inceptionv3"].hot
+    assert not any(e["kind"] == "evict" for e in placer.events)
+
+
+# -- cluster behaviour -----------------------------------------------------
+
+def _run(mix="consumer_burst", n=800, rate=40.0, **kw):
+    reqs = make_tenant_workload(mix, n_requests=n, rate_hz=rate, seed=0)
+    cl = _cluster(mix, **kw)
+    cl.run(reqs)
+    return cl
+
+
+def test_cluster_serves_and_scales():
+    cl = _run()
+    s = cl.metrics.summary()
+    assert s["served"] == 800
+    assert 0.0 < s["attainment"] <= 1.0
+    kinds = {e["kind"] for e in cl.events}
+    assert "place" in kinds
+    assert "evict" in kinds          # budget < 3 full hot sets
+    assert "scale_up" in kinds       # bursts exceed one replica
+    # Scale events carry the new active count within bounds.
+    for e in cl.events:
+        if e["kind"].startswith("scale"):
+            assert 1 <= e["n_active"] <= 3
+
+
+def test_cluster_sheds_to_on_device_under_overload():
+    cl = _run(rate=80.0)             # 2x the benchmark rate: saturate
+    sheds = [e for e in cl.events if e["kind"] == "shed"]
+    assert sheds
+    fallback_rows = [r for r in cl.metrics.records if r["fallback"]]
+    assert len(fallback_rows) == len(sheds)
+    assert all(r["model"] == "<on-device>" for r in fallback_rows)
+    # Only devices that CAN serve locally shed.
+    assert all(cl.on_device_ms[e["device"]] > 0 for e in sheds)
+
+
+def test_cluster_hedges_degraded_requests():
+    cl = _run("enterprise_degraded")     # outage fleet: degraded modes
+    s = cl.metrics.summary()
+    assert s.get("hedges", 0) > 0
+    hedged = [r for r in cl.metrics.records if r["hedged"]]
+    assert all(r["replica"] is not None for r in hedged)
+
+
+def test_cluster_rows_tag_tenant_and_replica():
+    cl = _run(n=200)
+    per = cl.metrics.per_tenant()
+    assert set(per) == {t.name for t in
+                        make_tenants("consumer_burst")}
+    assert sum(b["served"] for b in per.values()) == 200
+    for r in cl.metrics.records:
+        assert r["tenant"]
+        if not r["fallback"]:
+            assert r["replica"] in (0, 1, 2)
+
+
+def test_cluster_nests_as_a_stack():
+    # A cluster of clusters — the protocol composes.
+    inner = [_cluster(min_active=1) for _ in range(2)]
+    outer = Cluster(inner, "consumer_burst")
+    req = Request(arrival=0.0, rid=0, prompt=np.zeros(4, np.int32),
+                  max_new_tokens=2, sla_ms=1e6, t_input_ms=5.0,
+                  device_id="gold-flagship/pixel7", tenant="gold-flagship")
+    out = outer.submit(req)
+    outer.drain()
+    assert out.ok is not None
+    assert outer.metrics.served == 1
+
+
+# -- capture / replay pins -------------------------------------------------
+
+def test_capture_replay_bit_for_bit():
+    reqs = make_tenant_workload("consumer_burst", n_requests=600,
+                                rate_hz=40.0, seed=0)
+    mk = lambda: _cluster("consumer_burst")
+    tr = capture_run(mk(), reqs)
+    assert len(tr) == 600
+    assert tr.meta["cluster_events"]
+    assert replay_events(tr, mk) is True
+
+
+def test_replay_detects_divergence():
+    reqs = make_tenant_workload("consumer_burst", n_requests=400,
+                                rate_hz=40.0, seed=0)
+    tr = capture_run(_cluster("consumer_burst"), reqs)
+    # A differently-budgeted cluster makes different decisions.
+    assert replay_events(
+        tr, lambda: _cluster("consumer_burst",
+                             budget=int(140e6))) is False
+
+
+def test_requests_round_trip_through_trace():
+    reqs = make_tenant_workload("enterprise_degraded", n_requests=300,
+                                rate_hz=40.0, seed=1)
+    tr = capture_run(_cluster("enterprise_degraded"), reqs)
+    back = requests_from_cluster_trace(tr)
+    orig = sorted(reqs, key=lambda r: r.arrival)
+    assert [(r.device_id, r.tenant, r.sla_ms) for r in back] \
+        == [(r.device_id, r.tenant, r.sla_ms) for r in orig]
+    np.testing.assert_allclose([r.arrival for r in back],
+                               [r.arrival for r in orig], rtol=1e-6)
+    np.testing.assert_allclose([r.t_input_ms for r in back],
+                               [r.t_input_ms for r in orig], rtol=1e-6)
+
+
+def test_cluster_determinism_pin():
+    # Same replicas, same workload, same config -> identical metrics
+    # rows and event log (the determinism the replay pin rests on).
+    def go():
+        reqs = make_tenant_workload("consumer_burst", n_requests=300,
+                                    rate_hz=40.0, seed=0)
+        cl = _cluster("consumer_burst")
+        cl.run(reqs)
+        return cl
+    a, b = go(), go()
+    assert a.events == b.events
+    assert a.metrics.records == b.metrics.records

@@ -238,7 +238,7 @@ def test_server_adaptive_controller_issues_on_device_advisory(server):
         advisories = [r for r in recs if r["model"] == "<on-device>"]
         assert advisories and advisories[-1]["ok"]   # 150ms <= 400ms
         s = server.metrics.summary()
-        assert s["by_mode"]["degraded"] >= 1
+        assert s["by_mode"]["degraded"]["served"] >= 1
         assert s["fallbacks"] == len(advisories)
     finally:
         server.control, server.metrics = saved_control, saved_metrics
