@@ -1,0 +1,204 @@
+"""Cluster scaling: the python multi-tenant `Cluster` loop vs the jit
+`lax.scan` cluster program (serving/cluster_engine.py, DESIGN.md §17).
+
+Sweeps tenant-fleet sizes through both engines on the same workload —
+a three-SLA-class tenant mix (`scale_tenant_mix`) whose array fleets
+total 1k / 100k / 1M devices, served by a 3-replica cluster with the
+full control plane live: per-device adaptive controllers feeding
+cluster scale switches, least-queue-delay placement over the active
+prefix, SLA-class-priority shedding, and degraded-regime hedging.
+Rate points run without a cluster memory budget (placement without
+global-LRU churn — the budgeted compile path is covered by the check
+row below and benchmarks/server_capacity.py); the scan engine is timed
+with ``collect_rows=False``, its columnar-result fleet-scale path.
+
+Measurement mirrors benchmarks/engine_scale.py: each scan point runs
+once un-timed to warm the jit cache, then reports the median of
+`repeats` timed runs; the python engine needs no warmup. The
+acceptance sweep (`--full`) runs python at the full request count so
+the 100k-device speedup is measured on literally identical workloads;
+the 1M-device point runs the scan engine only.
+
+Rows: ``cluster.<engine>.d<devices>`` with requests/sec, plus
+``cluster.speedup.d<devices>`` where both engines ran (the acceptance
+gate: >= 20x at 100k tenant-devices) and one ``cluster.check.d1000``
+row — python vs scan events + metrics bitwise, and the
+place/evict/scale/shed event log replayed through `replay_events`,
+under a tight memory budget so eviction is exercised.
+
+Trajectory artifact: full runs append a point to
+``benchmarks/results/BENCH_cluster_scale.json`` (requests/sec per
+size), the perf series CI tracks across main pushes from this PR on.
+
+Smoke (CI): ``python benchmarks/cluster_scale.py --smoke``.
+Full (acceptance): ``python benchmarks/cluster_scale.py --full``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import time
+
+from benchmarks.common import RESULTS_DIR, emit, row
+
+MODELS = ["mobilenetv1_025", "mobilenetv1_10", "inceptionv3"]
+N_REPLICAS = 3
+RATE_HZ = 12.0
+SEED = 7
+CHECK_BUDGET = int(250e6)     # ~2 of 3 hot sets: forces eviction
+
+# (devices, python-engine requests, scan-engine requests).
+SWEEP_SMOKE = [(1_000, 3_000, 3_000)]
+SWEEP_RUN = [(1_000, 20_000, 20_000), (100_000, 50_000, 200_000)]
+SWEEP_FULL = [(1_000, 100_000, 100_000),
+              (100_000, 200_000, 200_000),
+              (1_000_000, None, 1_000_000)]
+
+
+def _replicas(seed: int = 100):
+    from repro.configs.paper_zoo import paper_profiles
+    from repro.serving.stack import SimReplicaStack
+    return [SimReplicaStack(paper_profiles(MODELS), seed=seed + i,
+                            name=f"r{i}") for i in range(N_REPLICAS)]
+
+
+def _cluster(mix, engine: str, shards: int, budget=None):
+    from repro.serving.cluster import Cluster
+    return Cluster(_replicas(), mix, memory_budget_bytes=budget,
+                   engine=engine, shards=shards)
+
+
+def _scan_once(mix, wl, shards: int):
+    from repro.serving.cluster_engine import scan_cluster_run
+    cl = _cluster(mix, "scan", shards)
+    t0 = time.perf_counter()
+    res = scan_cluster_run(cl, wl, shards=shards, collect_rows=False)
+    return time.perf_counter() - t0, res, cl
+
+
+def _check(n_requests: int, shards: int):
+    """Equality + replay pin at 1k devices under a tight budget: scan
+    events and metrics rows must be bitwise the python engine's, and
+    the python event log must replay exactly."""
+    from repro.configs.paper_zoo import scale_tenant_mix
+    from repro.serving.cluster import (capture_run, make_tenant_workload,
+                                       replay_events)
+    mix = scale_tenant_mix(1_000)
+    wl = make_tenant_workload(mix, n_requests=n_requests,
+                              rate_hz=RATE_HZ, seed=SEED)
+    mk = lambda: _cluster(mix, "python", 1, budget=CHECK_BUDGET)
+    cp = mk()
+    trace = capture_run(cp, wl)
+    replay_ok = replay_events(trace, mk)
+    cs = _cluster(mix, "scan", shards, budget=CHECK_BUDGET)
+    cs.run(wl)
+    scan_ok = (cp.events == cs.events
+               and cp.metrics.records == cs.metrics.records)
+    return (row("cluster.check.d1000", 0.0,
+                {"requests": n_requests, "events": len(cp.events),
+                 "scan_exact": scan_ok, "replay_exact": replay_ok}),
+            scan_ok and replay_ok)
+
+
+def bench(sweep, shards: int = 1, trajectory: bool = False,
+          check: bool = False):
+    from repro.configs.paper_zoo import scale_tenant_mix
+    from repro.serving.cluster import make_tenant_columns
+    rows = []
+    points = []
+    for devices, n_py, n_scan in sweep:
+        mix = scale_tenant_mix(devices)
+        rates = {}
+        for engine, n in (("python", n_py), ("scan", n_scan)):
+            if n is None:
+                continue
+            wl = make_tenant_columns(mix, n_requests=n,
+                                     rate_hz=RATE_HZ, seed=SEED)
+            if engine == "scan":
+                _scan_once(mix, wl, shards)            # warm this shape
+                repeats = 2 if devices >= 1_000_000 else 3
+                runs = [_scan_once(mix, wl, shards)
+                        for _ in range(repeats)]
+                dt = statistics.median(d for d, _, _ in runs)
+                _, res, cl = runs[-1]
+                att = float(res.ok.mean())
+                extra = {"sheds": int(res.shed.sum()),
+                         "hedges": int(res.hedged.sum()),
+                         "events": len(cl.events)}
+            else:
+                cl = _cluster(mix, "python", 1)
+                t0 = time.perf_counter()
+                cl.run(wl)
+                dt = time.perf_counter() - t0
+                s = cl.metrics.summary()
+                att = s["attainment"]
+                extra = {"sheds": s.get("fallbacks", 0),
+                         "hedges": s.get("hedges", 0),
+                         "events": len(cl.events)}
+            rates[engine] = n / dt
+            rows.append(row(f"cluster.{engine}.d{devices}", dt * 1e6,
+                            dict({"devices": devices, "requests": n,
+                                  "reqs_per_s": f"{n / dt:.0f}",
+                                  "attainment": f"{att:.4f}"}, **extra)))
+            points.append({"devices": devices, "requests": n,
+                           "engine": engine,
+                           "reqs_per_s": round(n / dt, 1)})
+        if len(rates) == 2:
+            rows.append(row(
+                f"cluster.speedup.d{devices}", 0.0,
+                {"devices": devices,
+                 "x": f"{rates['scan'] / rates['python']:.1f}"}))
+    check_row, check_ok = _check(n_requests=2_000, shards=shards)
+    rows.append(check_row)
+    if check and not check_ok:
+        raise SystemExit("cluster_scale check FAILED: " + check_row)
+    if trajectory:
+        path = os.path.join(RESULTS_DIR, "BENCH_cluster_scale.json")
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        series = []
+        if os.path.exists(path):
+            series = json.load(open(path)).get("series", [])
+        series.append({"unix_time": int(time.time()),
+                       "shards": shards, "points": points})
+        with open(path, "w") as f:
+            json.dump({"bench": "cluster_scale", "series": series}, f,
+                      indent=2, sort_keys=True)
+        rows.append(row("cluster.trajectory", 0.0, {"path": path}))
+    return rows
+
+
+def run():
+    """benchmarks.run entry: moderate sizes (CI artifact job)."""
+    return bench(SWEEP_RUN)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes (CI fast-job smoke); exits "
+                         "non-zero if the scan/replay check fails")
+    ap.add_argument("--full", action="store_true",
+                    help="acceptance sizes incl. 1M tenant-devices, "
+                         "and append the BENCH_*.json trajectory point")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="shard the controller program's device axis "
+                         "(needs host devices; see "
+                         "repro.utils.config.configure)")
+    args = ap.parse_args()
+    if args.shards > 1:
+        from benchmarks.common import configure_host
+        configure_host(host_devices=args.shards)
+    sweep = (SWEEP_SMOKE if args.smoke
+             else SWEEP_FULL if args.full else SWEEP_RUN)
+    print("name,us_per_call,derived")
+    emit(bench(sweep, shards=args.shards, trajectory=args.full,
+               check=args.smoke))
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    main()

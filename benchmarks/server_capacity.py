@@ -17,10 +17,12 @@ workload at ``--rate-mult`` times the 4 Hz single-replica baseline rate
 is served by an N-replica shared cluster and by every static
 tenant->replica pinning (each pinned replica gets budget/N memory).
 Reported per mix: cluster SLA attainment vs the best static
-assignment, event counts, and whether the placement/eviction/scale
-event log replays bit-for-bit from the captured trace. ``--check``
-exits non-zero unless the cluster beats best-static on every mix AND
-every replay is exact — the CI acceptance gate."""
+assignment, event counts, whether the placement/eviction/scale event
+log replays bit-for-bit from the captured trace, and whether the scan
+cluster engine (serving/cluster_engine.py) reproduces the python run
+bit-for-bit. ``--check`` exits non-zero unless the cluster beats
+best-static on every mix AND every replay and scan run is exact — the
+CI acceptance gate."""
 
 from __future__ import annotations
 
@@ -92,6 +94,14 @@ def run_multi_tenant(mixes=MIXES, *, n_requests: int = 600,
         trace = capture_run(cluster, reqs)
         s = cluster.metrics.summary()
         replay_ok = replay_events(trace, mk)
+        # The scan engine (serving/cluster_engine.py) must reproduce
+        # the python loop bit-for-bit on the same workload: every
+        # event and every metrics row.
+        scl = Cluster(_replicas(seed), mix,
+                      memory_budget_bytes=CLUSTER_BUDGET, engine="scan")
+        scl.run(reqs)
+        scan_ok = (scl.events == cluster.events
+                   and scl.metrics.records == cluster.metrics.records)
         static, assign = _best_static(reqs, make_tenants(mix), seed)
         kinds = Counter(e["kind"] for e in cluster.events)
         rows.append(row(
@@ -106,12 +116,15 @@ def run_multi_tenant(mixes=MIXES, *, n_requests: int = 600,
                 "evicts": kinds.get("evict", 0),
                 "scales": (kinds.get("scale_up", 0)
                            + kinds.get("scale_down", 0)),
-                "replay_exact": replay_ok}))
+                "replay_exact": replay_ok,
+                "scan_exact": scan_ok}))
         if s["attainment"] <= static:
             failures.append(f"{mix}: cluster {s['attainment']:.3f} "
                             f"<= static {static:.3f}")
         if not replay_ok:
             failures.append(f"{mix}: event replay diverged")
+        if not scan_ok:
+            failures.append(f"{mix}: scan engine diverged from python")
     if check and failures:
         raise SystemExit("multi-tenant check FAILED: "
                          + "; ".join(failures))

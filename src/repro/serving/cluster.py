@@ -50,13 +50,15 @@ import numpy as np
 from repro.configs.paper_zoo import TENANT_MIXES, TENANT_SLA_CLASSES
 from repro.serving.batching import Request
 from repro.serving.control import AdaptiveController, make_controller
-from repro.serving.fleet import make_fleet
+from repro.serving.fleet import ArrayFleet, make_fleet
 from repro.serving.metrics import ServingMetrics
 from repro.serving.stack import ServingStack, StackOutcome
 
 __all__ = ["TenantSpec", "make_tenants", "make_tenant_workload",
-           "ClusterPlacer", "Cluster", "capture_run",
-           "requests_from_cluster_trace", "replay_events"]
+           "TenantColumns", "make_tenant_columns",
+           "requests_from_columns", "ClusterPlacer", "Cluster",
+           "capture_run", "requests_from_cluster_trace",
+           "replay_events"]
 
 
 # --------------------------------------------------------------------------
@@ -118,21 +120,79 @@ def make_tenants(mix: Union[str, Sequence]) -> List[TenantSpec]:
     return out
 
 
-def make_tenant_workload(mix: Union[str, Sequence], *,
-                         n_requests: int, rate_hz: float,
-                         seed: int = 0) -> List[Request]:
-    """Sample a multi-tenant request trace: each tenant's share of
-    `n_requests` arrives as a nonhomogeneous stream over the horizon
-    ``n_requests / rate_hz`` (base load plus a `burst`-times peak in a
-    window centred at `phase`), with T_input drawn from the tenant's
-    own fleet. Requests carry ``device_id = "<tenant>/<device>"`` (so
-    per-device estimation and control stay per-tenant-population),
-    the tenant tag, and the SLA class's deadline. Deterministic in
-    `seed`; returned in arrival order with sequential rids."""
+@dataclass
+class TenantColumns:
+    """Columnar multi-tenant workload (the scan cluster engine's view).
+
+    Devices live in one global *column* universe: tenant ``t``'s
+    devices occupy columns ``[col_offsets[t], col_offsets[t+1])`` in
+    fleet order, so per-column arrays (`col_prior`, `col_od_ms`) line
+    up with the controller's device axis. Request rows are sorted by
+    ``(arrival, tenant name)`` — exactly `make_tenant_workload`'s
+    ordering — with row i playing rid i."""
+
+    tenants: List[TenantSpec]
+    arrival: np.ndarray       # (N,) f64, sorted
+    t_input: np.ndarray       # (N,) f64
+    col: np.ndarray           # (N,) int64 global device column
+    tenant_idx: np.ndarray    # (N,) int64 into `tenants`
+    sla_ms: np.ndarray        # (N,) f64 per-request deadline
+    col_offsets: np.ndarray   # (T+1,) int64
+    col_tenant: np.ndarray    # (D,) int64 owning tenant per column
+    col_prior: np.ndarray     # (D,) f64 long-run mean T_input
+    col_od_ms: np.ndarray     # (D,) f64 on-device latency (0 = none)
+    col_local: List           # per-column local device token (str|int)
+
+    def __len__(self) -> int:
+        return len(self.arrival)
+
+    def device_name(self, c: int) -> str:
+        """The ``"<tenant>/<device>"`` id string for column `c`."""
+        c = int(c)
+        t = self.tenants[self.col_tenant[c]]
+        return f"{t.name}/{self.col_local[c]}"
+
+    def __getitem__(self, c: int) -> str:
+        """Index-as-name view, so the columns object itself can serve
+        as the scan engine's `device_names` table without materializing
+        D id strings."""
+        return self.device_name(c)
+
+
+def _tenant_fleet_columns(fleet):
+    """``(local_tokens, prior, od_ms)`` for one tenant's fleet —
+    `FleetMixture` devices are keyed by id string, `ArrayFleet`
+    devices by integer index (materializing 10^6 id strings would
+    dwarf the workload)."""
+    if isinstance(fleet, ArrayFleet):
+        local = list(range(fleet.n_devices))
+    else:
+        local = list(fleet.device_ids)
+    return local, fleet.prior_array(), fleet.on_device_arrays()[0]
+
+
+def make_tenant_columns(mix: Union[str, Sequence], *,
+                        n_requests: int, rate_hz: float,
+                        seed: int = 0) -> TenantColumns:
+    """`make_tenant_workload`'s sampler in columnar form: all-array
+    arrival/T_input/device generation (no per-request python loop) plus
+    the per-column prior / on-device tables. `make_tenant_workload`
+    materializes `Request`s from this; the scan cluster engine consumes
+    it directly."""
     tenants = make_tenants(mix)
     horizon_ms = n_requests / float(rate_hz) * 1000.0
     total_w = sum(t.weight for t in tenants)
-    reqs: List[Request] = []
+    # Global device-column universe (all tenants, request share or not:
+    # the controller priors prime every tenant's devices).
+    fleets = [make_fleet(t.fleet) for t in tenants]
+    per = [_tenant_fleet_columns(f) for f in fleets]
+    col_offsets = np.cumsum([0] + [len(p[0]) for p in per])
+    col_tenant = np.repeat(np.arange(len(tenants), dtype=np.int64),
+                           [len(p[0]) for p in per])
+    col_local = [tok for p in per for tok in p[0]]
+    col_prior = np.concatenate([p[1] for p in per])
+    col_od = np.concatenate([p[2] for p in per])
+    arr_parts, ti_parts, col_parts, tid_parts = [], [], [], []
     root = np.random.SeedSequence(seed)
     for ti, (t, ss) in enumerate(zip(tenants,
                                      root.spawn(len(tenants)))):
@@ -151,19 +211,57 @@ def make_tenant_workload(mix: Union[str, Sequence], *,
         cdf /= cdf[-1]
         u = np.sort(rng.random(m))
         arrivals = np.interp(u, cdf, grid) * horizon_ms
-        fleet = make_fleet(t.fleet)
-        tr = fleet.sample_trace(rng, m)
-        dev_ids = np.asarray(tr.device_ids, object)[tr.device_index]
-        for a, ti_ms, dev in zip(arrivals, tr.t_input, dev_ids):
-            reqs.append(Request(
-                arrival=float(a), rid=0,
-                prompt=np.zeros(4, np.int32),
-                max_new_tokens=4, sla_ms=t.t_sla,
-                t_input_ms=float(ti_ms),
-                device_id=f"{t.name}/{dev}", tenant=t.name))
-    reqs.sort(key=lambda r: (r.arrival, r.tenant))
-    for i, r in enumerate(reqs):
-        r.rid = i
+        tr = fleets[ti].sample_trace(rng, m)
+        arr_parts.append(arrivals)
+        ti_parts.append(tr.t_input)
+        col_parts.append(col_offsets[ti] + tr.device_index)
+        tid_parts.append(np.full(m, ti, np.int64))
+    arrival = np.concatenate(arr_parts)
+    tenant_idx = np.concatenate(tid_parts)
+    # Sort by (arrival, tenant name): lexsort is stable, so equal keys
+    # keep concatenation (= mix) order, matching the python list sort.
+    name_rank = np.argsort(
+        np.argsort([t.name for t in tenants])).astype(np.int64)
+    order = np.lexsort((name_rank[tenant_idx], arrival))
+    t_sla = np.array([t.t_sla for t in tenants], np.float64)
+    tenant_idx = tenant_idx[order]
+    return TenantColumns(
+        tenants=tenants, arrival=arrival[order],
+        t_input=np.concatenate(ti_parts)[order],
+        col=np.concatenate(col_parts)[order],
+        tenant_idx=tenant_idx, sla_ms=t_sla[tenant_idx],
+        col_offsets=col_offsets.astype(np.int64),
+        col_tenant=col_tenant, col_prior=col_prior,
+        col_od_ms=col_od, col_local=col_local)
+
+
+def make_tenant_workload(mix: Union[str, Sequence], *,
+                         n_requests: int, rate_hz: float,
+                         seed: int = 0) -> List[Request]:
+    """Sample a multi-tenant request trace: each tenant's share of
+    `n_requests` arrives as a nonhomogeneous stream over the horizon
+    ``n_requests / rate_hz`` (base load plus a `burst`-times peak in a
+    window centred at `phase`), with T_input drawn from the tenant's
+    own fleet. Requests carry ``device_id = "<tenant>/<device>"`` (so
+    per-device estimation and control stay per-tenant-population),
+    the tenant tag, and the SLA class's deadline. Deterministic in
+    `seed`; returned in arrival order with sequential rids."""
+    return requests_from_columns(make_tenant_columns(
+        mix, n_requests=n_requests, rate_hz=rate_hz, seed=seed))
+
+
+def requests_from_columns(cols: TenantColumns) -> List[Request]:
+    """Materialize `Request` objects from a columnar workload (arrival
+    order, sequential rids — `make_tenant_workload`'s output shape)."""
+    reqs: List[Request] = []
+    for i in range(len(cols)):
+        t = cols.tenants[cols.tenant_idx[i]]
+        reqs.append(Request(
+            arrival=float(cols.arrival[i]), rid=i,
+            prompt=np.zeros(4, np.int32),
+            max_new_tokens=4, sla_ms=t.t_sla,
+            t_input_ms=float(cols.t_input[i]),
+            device_id=cols.device_name(cols.col[i]), tenant=t.name))
     return reqs
 
 
@@ -173,7 +271,13 @@ def tenant_on_device_ms(tenants: Sequence[TenantSpec]
     in every tenant's fleet that can serve locally (the shed targets)."""
     out: Dict[str, float] = {}
     for t in tenants:
-        for d in make_fleet(t.fleet).devices:
+        fleet = make_fleet(t.fleet)
+        if isinstance(fleet, ArrayFleet):
+            od = fleet.on_device_arrays()[0]
+            for i in np.flatnonzero(od > 0):
+                out[f"{t.name}/{i}"] = float(od[i])
+            continue
+        for d in fleet.devices:
             if d.on_device_ms > 0:
                 out[f"{t.name}/{d.device_id}"] = d.on_device_ms
     return out
@@ -266,9 +370,15 @@ class Cluster:
                  controller: Union[str, AdaptiveController,
                                    None] = "reactive",
                  hedge: bool = True, shed_factor: float = 1.0,
-                 scale_headroom: float = 0.25, min_active: int = 1):
+                 scale_headroom: float = 0.25, min_active: int = 1,
+                 engine: str = "python", shards: int = 1):
         if not replicas:
             raise ValueError("cluster needs at least one replica")
+        if engine not in ("python", "scan"):
+            raise ValueError(f"unknown cluster engine {engine!r}; "
+                             f"known: python, scan")
+        self.engine = engine
+        self.shards = int(shards)
         self.replicas = list(replicas)
         self.tenants = {t.name: t for t in make_tenants(tenants)}
         self.events: List[dict] = []
@@ -291,8 +401,24 @@ class Cluster:
         self.metrics = ServingMetrics()
         self._n = 0               # requests admitted
         self._seen_switches = 0   # controller events already applied
+        # Per-replica queue/capacity caches (None = stale). Replica
+        # queue state only moves on submit/drain, so `submit` reads
+        # cached `free_time` snapshots instead of recomputing O(R)
+        # queue delays per request, and invalidates only the replicas
+        # it touched. The delay expression is the replica's own
+        # (max(0, free - arrive)), so cached decisions are bit-for-bit
+        # the uncached ones (pinned by tests/test_cluster_engine.py).
+        self._free_cache: List[Optional[float]] = [None] * len(replicas)
+        self._cap_cache: List[Optional[float]] = [None] * len(replicas)
 
     # -- replica surface (lets clusters nest inside clusters) ---------
+    @property
+    def free_time(self) -> float:
+        """Earliest child free-up — the raw queue state a parent
+        cluster caches (min is monotone through max(0, .-now), so
+        deriving the delay from this matches `queue_delay` bitwise)."""
+        return min(r.free_time for r in self.replicas[:self.n_active])
+
     def queue_delay(self, now: float) -> float:
         """The best delay an arriving request would see here."""
         return min(r.queue_delay(now)
@@ -301,6 +427,25 @@ class Cluster:
     def capacity_score(self) -> float:
         return sum(r.capacity_score()
                    for r in self.replicas[:self.n_active])
+
+    def _replica_delay(self, j: int, arrive: float) -> float:
+        f = self._free_cache[j]
+        if f is None:
+            f = getattr(self.replicas[j], "free_time", None)
+            if f is None:     # stack without queue-state exposure
+                return self.replicas[j].queue_delay(arrive)
+            self._free_cache[j] = f
+        return max(0.0, f - arrive)
+
+    def _replica_capacity(self, j: int) -> float:
+        c = self._cap_cache[j]
+        if c is None:
+            c = self._cap_cache[j] = self.replicas[j].capacity_score()
+        return c
+
+    def _invalidate(self, j: int) -> None:
+        self._free_cache[j] = None
+        self._cap_cache[j] = None
 
     # -- scaling ------------------------------------------------------
     def _scale(self, delta: int, reason: str):
@@ -317,7 +462,10 @@ class Cluster:
         """Controller mode switches drive replica scaling: an
         escalation (up-alarm) adds a replica, a recovery retires one.
         Events are consumed in order, once."""
-        ev = self.controller.events
+        # Read the raw event list: the `events` property copies every
+        # dict, which is O(total switches) per submit — O(N*S) over a
+        # run. The tail is only read here, never mutated.
+        ev = self.controller._events
         for e in ev[self._seen_switches:]:
             self._scale(1 if e["alarm"] > 0 else -1,
                         reason=f"switch:{e['device']}")
@@ -337,15 +485,14 @@ class Cluster:
         mode_name = mode.name if mode is not None else "static"
         degraded = bool(mode.degraded) if mode is not None else False
         arrive = now + req.t_input_ms
-        delays = [r.queue_delay(arrive)
-                  for r in self.replicas[:self.n_active]]
+        delays = [self._replica_delay(j, arrive)
+                  for j in range(self.n_active)]
         # Load-driven scale-up: queueing alone would eat the headroom
         # share of the SLA on every active replica.
         if (min(delays) > self.scale_headroom * t_sla
                 and self.n_active < len(self.replicas)):
             self._scale(1, reason="load")
-            delays.append(
-                self.replicas[self.n_active - 1].queue_delay(arrive))
+            delays.append(self._replica_delay(self.n_active - 1, arrive))
         # Load shedding: the cluster is saturated past the SLA itself;
         # a device with a local model serves on-device instead of
         # joining a doomed queue. Higher `shed_priority` classes need
@@ -371,10 +518,10 @@ class Cluster:
                                     tenant=req.tenant, fallback=True)
         order = sorted(
             range(self.n_active),
-            key=lambda j: (delays[j],
-                           -self.replicas[j].capacity_score(), j))
+            key=lambda j: (delays[j], -self._replica_capacity(j), j))
         j = order[0]
         out = self.replicas[j].submit(req, now=now)
+        self._invalidate(j)
         hedged = False
         if degraded and self.hedge and len(order) > 1:
             # Cross-replica hedge (MDInference): duplicate to the
@@ -383,6 +530,7 @@ class Cluster:
             # which is why only degraded-regime requests pay it.
             j2 = order[1]
             out2 = self.replicas[j2].submit(req, now=now)
+            self._invalidate(j2)
             hedged = True
             if (out2.e2e_ms is not None and out.e2e_ms is not None
                     and out2.e2e_ms < out.e2e_ms):
@@ -401,16 +549,28 @@ class Cluster:
                             tenant=req.tenant, hedged=hedged)
 
     def drain(self) -> None:
-        for r in self.replicas:
+        for i, r in enumerate(self.replicas):
             r.drain()
+            self._invalidate(i)
 
     def observe_outcome(self, name: str, latency_ms: float, *,
                         cold: bool = False, now: float = 0.0) -> None:
-        for r in self.replicas:
+        for i, r in enumerate(self.replicas):
             r.observe_outcome(name, latency_ms, cold=cold, now=now)
+            self._invalidate(i)
 
     # -- convenience --------------------------------------------------
-    def run(self, requests: Sequence[Request]) -> ServingMetrics:
+    def run(self, requests) -> ServingMetrics:
+        """Serve a workload — a `Request` sequence or a
+        `TenantColumns` — through the configured engine. The scan
+        engine (serving/cluster_engine.py) reproduces the python
+        loop's events and metrics bit-for-bit."""
+        if self.engine == "scan":
+            from repro.serving.cluster_engine import scan_cluster_run
+            scan_cluster_run(self, requests, shards=self.shards)
+            return self.metrics
+        if isinstance(requests, TenantColumns):
+            requests = requests_from_columns(requests)
         for req in sorted(requests, key=lambda r: r.arrival):
             self.submit(req, now=req.arrival)
         self.drain()

@@ -488,17 +488,37 @@ def device_tier_profile(tier: str, *, device_id: Optional[str] = None,
         on_device_accuracy=od_acc, tier=tier)
 
 
+# `array:<n>[:<seed>]` fleets are cached per spec string: tenant
+# helpers (workload gen, priors, on-device tables) each re-resolve the
+# spec, and rebuilding a million-device ArrayFleet per call would
+# dominate. Safe to share — ArrayFleet is immutable after construction
+# (sampling uses the caller's generator).
+_ARRAY_FLEET_CACHE: Dict[str, "ArrayFleet"] = {}
+
+
 def make_fleet(spec: Union[str, FleetMixture, "ArrayFleet", None]
                ) -> Union[FleetMixture, "ArrayFleet", None]:
     """Resolve a fleet spec: a `FleetMixture` or `ArrayFleet` passes
-    through, a string names a `configs/paper_zoo.FLEET_SCENARIOS`
-    entry, None -> None (single shared process — the pre-fleet default
-    path)."""
+    through, ``"array:<n>[:<seed>]"`` builds (and caches) an
+    `ArrayFleet` of n devices, any other string names a
+    `configs/paper_zoo.FLEET_SCENARIOS` entry, None -> None (single
+    shared process — the pre-fleet default path)."""
     if spec is None or isinstance(spec, (FleetMixture, ArrayFleet)):
         return spec
     if not isinstance(spec, str):
         raise ValueError(f"fleet spec must be a FleetMixture or a str, "
                          f"got {type(spec).__name__}")
+    if spec.startswith("array:"):
+        fleet = _ARRAY_FLEET_CACHE.get(spec)
+        if fleet is None:
+            parts = spec.split(":")
+            if len(parts) not in (2, 3):
+                raise ValueError(f"bad array fleet spec {spec!r}; "
+                                 f"expected 'array:<n>[:<seed>]'")
+            seed = int(parts[2]) if len(parts) == 3 else 0
+            fleet = ArrayFleet(int(parts[1]), seed=seed, name=spec)
+            _ARRAY_FLEET_CACHE[spec] = fleet
+        return fleet
     if spec not in FLEET_SCENARIOS:
         raise ValueError(f"unknown fleet {spec!r}; known: "
                          f"{sorted(FLEET_SCENARIOS)}")

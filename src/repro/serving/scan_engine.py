@@ -134,8 +134,14 @@ def _static_desc(plane) -> Optional[BankDesc]:
     return _desc_from_instance(est, 0)
 
 
-def _ctrl_desc(plane) -> CtrlDesc:
-    ctrl = plane.controller
+def ctrl_desc_from_controller(ctrl, *, lag: int = 0,
+                              table_specs=None) -> CtrlDesc:
+    """Translate an `AdaptiveController` into the column program's
+    `CtrlDesc`. Shared with the cluster engine
+    (serving/cluster_engine.py), which runs the same controller kernel
+    without a `ControlPlane` around it: the cluster only consumes the
+    mode / switch-event outputs, so it passes ``table_specs=(None,)``
+    to keep the per-mode estimator lanes trivial."""
     det = ctrl._detector_template
     if type(det) is CusumDetector:
         kind, drift = "cusum", det.drift
@@ -149,9 +155,11 @@ def _ctrl_desc(plane) -> CtrlDesc:
     if det.statistic != 0.0:
         raise ValueError("engine='scan' needs a pristine detector "
                          "template (statistic != 0)")
+    specs = (tuple(table_specs) if table_specs is not None else
+             tuple(dict.fromkeys(m.t_estimator for m in ctrl.modes)))
     table = tuple(
-        None if spec is None else _desc_from_spec(spec, plane.lag)
-        for spec in dict.fromkeys(m.t_estimator for m in ctrl.modes))
+        None if spec is None else _desc_from_spec(spec, lag)
+        for spec in specs)
     return CtrlDesc(
         monitor=_desc_from_spec(ctrl.monitor, 0), det_kind=kind,
         threshold=det.threshold, drift=drift,
@@ -159,6 +167,10 @@ def _ctrl_desc(plane) -> CtrlDesc:
         min_scale=det.min_scale, n_modes=len(ctrl.modes),
         start=ctrl.start, cooldown=ctrl.cooldown,
         scale_frac=ctrl.scale_frac, table=table)
+
+
+def _ctrl_desc(plane) -> CtrlDesc:
+    return ctrl_desc_from_controller(plane.controller, lag=plane.lag)
 
 
 # --------------------------------------------------------------------------
@@ -213,6 +225,23 @@ def _topm_size(q: float, n_rows: int, cap: int = 8):
     return m if m <= cap else None
 
 
+def _unfused(prod, jnp):
+    """Round a product separately before it feeds an add, so the XLA
+    CPU backend cannot contract ``a*b + c`` into one fused
+    multiply-add — python/numpy round the product and the sum
+    separately, and engine parity here is bitwise.
+
+    The guard is ``where(prod == prod, prod, 0.0)``: NaN semantics
+    keep the compiler from proving the predicate true, and a select
+    (unlike optimization_barrier or a bitcast round-trip, both erased
+    before LLVM's contraction pass) survives to codegen. Two guarded
+    products may feed one add — the select-merge rule only fuses
+    selects sharing a predicate, and each guard's predicate is its own
+    product. Only ever wrap products that are finite on lanes whose
+    value is used (a used-NaN lane would turn into 0.0)."""
+    return jnp.where(prod == prod, prod, 0.0)
+
+
 def _core_init(desc: BankDesc, D: int, jnp, n_rows=None):
     if desc.kind == "ewma":
         return {"est": jnp.zeros(D), "seen": jnp.zeros(D, bool)}
@@ -258,7 +287,7 @@ def _core_estimate(desc: BankDesc, st, priors, x, jnp):
     # pctl: numpy-interpolation percentile read off the incrementally
     # maintained sorted state (no per-row sort).
     c = jnp.minimum(st["cnt"], desc.window).astype(jnp.float64)
-    v = (desc.param / 100.0) * (c - 1.0)
+    v = _unfused((desc.param / 100.0) * (c - 1.0), jnp)
     lo = jnp.clip(jnp.floor(v), 0).astype(jnp.int32)
     hi = jnp.clip(jnp.ceil(v), 0).astype(jnp.int32)
     g = v - jnp.floor(v)
@@ -273,16 +302,19 @@ def _core_estimate(desc: BankDesc, st, priors, x, jnp):
         s = st["sbuf"]
         a = jnp.take_along_axis(s, lo[:, None], 1)[:, 0]
         b = jnp.take_along_axis(s, hi[:, None], 1)[:, 0]
-    warm = jnp.where(g >= 0.5, b - (b - a) * (1.0 - g),
-                     a + (b - a) * g)
+    warm = jnp.where(
+        g >= 0.5, b - _unfused((b - a) * (1.0 - g), jnp),
+        a + _unfused((b - a) * g, jnp))
     return jnp.where(st["cnt"] > 0, warm, fallback)
 
 
 def _core_observe(desc: BankDesc, st, x, mask, jnp):
     if desc.kind == "ewma":
-        upd = jnp.where(st["seen"],
-                        (1.0 - desc.param) * st["est"] + desc.param * x,
-                        x)
+        upd = jnp.where(
+            st["seen"],
+            _unfused((1.0 - desc.param) * st["est"], jnp)
+            + _unfused(desc.param * x, jnp),
+            x)
         return {"est": jnp.where(mask, upd, st["est"]),
                 "seen": st["seen"] | mask}
     if desc.kind == "pctl":
@@ -392,8 +424,10 @@ def _det_step(c: CtrlDesc, st, r, s_obs, valid, jnp):
         cur = jnp.where(st["sset"], st["scale"],
                         jnp.maximum(s_obs, c.min_scale))
         z = r / cur
-        new = jnp.maximum((1.0 - c.scale_beta) * cur
-                          + c.scale_beta * s_obs, c.min_scale)
+        new = jnp.maximum(
+            _unfused((1.0 - c.scale_beta) * cur, jnp)
+            + _unfused(c.scale_beta * s_obs, jnp),
+            c.min_scale)
         st["scale"] = jnp.where(valid, new, st["scale"])
         st["sset"] = st["sset"] | valid
     if c.det_kind == "cusum":

@@ -36,7 +36,58 @@ from repro.serving.control import ControlPlane
 from repro.serving.metrics import ServingMetrics
 from repro.serving.router import Router
 
-__all__ = ["ServingStack", "StackOutcome", "SimReplicaStack"]
+__all__ = ["ServingStack", "StackOutcome", "SimReplicaStack",
+           "BlockNormals"]
+
+
+class BlockNormals:
+    """Blocked gaussian sampling with the scalar draw order preserved.
+
+    `SimReplicaStack` consumes one gaussian per exec sample (plus one
+    per cold start), through ``Generator.normal(loc, scale)``. numpy
+    computes that as ``loc + scale * standard_normal()``, and a block
+    ``standard_normal(n)`` consumes the ziggurat stream exactly like n
+    scalar calls — so refilling from ``standard_normal(block)`` and
+    affine-transforming per draw is bit-for-bit the scalar sequence
+    while paying the generator call overhead once per `block` draws
+    (pinned by tests/test_cluster_engine.py).
+
+    `take(n)` hands the next n standard normals out as an array —
+    the scan cluster engine (serving/cluster_engine.py) pre-draws each
+    replica's whole stream from a deepcopy of this object, then calls
+    `take` on the live one to advance it by exactly the count the scan
+    consumed, so python and scan paths leave identical RNG state.
+    """
+
+    def __init__(self, seed, *, block: int = 256):
+        self.gen = (seed if isinstance(seed, np.random.Generator)
+                    else np.random.default_rng(seed))
+        self.block = int(block)
+        self._z = np.empty(0, np.float64)
+        self._i = 0
+
+    def normal(self, loc: float = 0.0, scale: float = 1.0) -> float:
+        if self._i >= len(self._z):
+            self._z = self.gen.standard_normal(self.block)
+            self._i = 0
+        z = self._z[self._i]
+        self._i += 1
+        return float(loc + scale * z)
+
+    def take(self, n: int) -> np.ndarray:
+        """Consume the next `n` standard normals, leaving the state
+        exactly where n scalar `normal` calls would."""
+        out = np.empty(int(n), np.float64)
+        filled = 0
+        while filled < len(out):
+            if self._i >= len(self._z):
+                self._z = self.gen.standard_normal(self.block)
+                self._i = 0
+            k = min(len(self._z) - self._i, len(out) - filled)
+            out[filled:filled + k] = self._z[self._i:self._i + k]
+            self._i += k
+            filled += k
+        return out
 
 
 @dataclass
@@ -106,7 +157,8 @@ class SimReplicaStack:
         self.speed = float(speed)
         self.tokens_per_s = tokens_per_s
         self.metrics = ServingMetrics()
-        self.rng = np.random.default_rng(np.random.SeedSequence(seed))
+        self.rng = BlockNormals(
+            np.random.default_rng(np.random.SeedSequence(seed)))
         self._server_free = 0.0
         # Cluster-wide placement hook (serving/cluster.py): when set,
         # hot transitions route through the placer's global budget
@@ -123,6 +175,14 @@ class SimReplicaStack:
             return float(self.tokens_per_s)
         mus = [p.mu for p in self.router.current_profiles() if p.mu > 0]
         return 1000.0 / min(mus) if mus else 0.0
+
+    @property
+    def free_time(self) -> float:
+        """When the virtual server frees up — the raw queue state.
+        `Cluster` caches this per replica and derives `queue_delay`
+        itself (same ``max(0, free - arrive)`` expression, so the
+        cached path is bit-for-bit the uncached one)."""
+        return self._server_free
 
     def queue_delay(self, now: float) -> float:
         """How long a request arriving `now` waits before executing."""

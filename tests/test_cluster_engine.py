@@ -1,0 +1,152 @@
+"""Scan cluster engine equivalence (serving/cluster_engine.py).
+
+The contract is DESIGN.md §17's: `Cluster.run(engine="scan")` is the
+python submit loop compiled into one jit `lax.scan` program, and every
+integer-valued output is bit-for-bit the reference's — the
+place/evict/scale/shed event log, the metrics rows (floats included:
+the scan arithmetic is FMA-guarded to round exactly like numpy), the
+per-replica zoo/queue/RNG state left behind, and the shared
+controller's event log. The matrix covers every `TENANT_MIXES`
+workload x feature toggles (hedge, shed, controller, memory budget)
+plus the sharded controller program (skipped unless the host exposes
+2+ XLA devices — set REPRO_HOST_DEVICES=2 or more to opt in, as the
+CI fast job does).
+
+Also pins `BlockNormals` (serving/stack.py): blocked refills and bulk
+`take` must consume the generator stream exactly like scalar
+``Generator.normal`` calls — the scan engine pre-draws whole replica
+streams through it.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_zoo import (TENANT_MIXES, paper_profiles,
+                                     scale_tenant_mix)
+from repro.serving.cluster import (Cluster, make_tenant_columns,
+                                   make_tenant_workload)
+from repro.serving.stack import BlockNormals, SimReplicaStack
+
+MODELS = ["mobilenetv1_025", "mobilenetv1_10", "inceptionv3"]
+BUDGET = int(250e6)          # ~2 of 3 hot sets: eviction is exercised
+N = 600
+RATE = 40.0
+
+
+def _replicas(n=3, seed=100):
+    return [SimReplicaStack(paper_profiles(MODELS), seed=seed + i,
+                            name=f"r{i}") for i in range(n)]
+
+
+def _state(cl):
+    """Everything a follow-up run could observe: queue clocks, zoo
+    placement state, cold-start counters, and the exact RNG streams."""
+    out = []
+    for r in cl.replicas:
+        pol_rng = getattr(r.router.policy, "rng", None)
+        out.append(dict(
+            free=r._server_free,
+            zoo={n: (e.hot, e.last_used, e.loads, e.evictions)
+                 for n, e in r.router.zoo.entries.items()},
+            colds=r.router.zoo.total_cold_starts,
+            rng=r.rng.gen.bit_generator.state["state"],
+            block=(r.rng._i, r.rng._z.tolist()),
+            pol_rng=(None if pol_rng is None
+                     else pol_rng.bit_generator.state["state"])))
+    return out
+
+
+def _pair(mix, *, n=N, rate=RATE, shards=1, budget=BUDGET, seed=7, **kw):
+    wl = make_tenant_workload(mix, n_requests=n, rate_hz=rate, seed=seed)
+    cp = Cluster(_replicas(), mix, memory_budget_bytes=budget,
+                 engine="python", **kw)
+    cs = Cluster(_replicas(), mix, memory_budget_bytes=budget,
+                 engine="scan", shards=shards, **kw)
+    cp.run(list(wl))
+    cs.run(list(wl))
+    return cp, cs
+
+
+def _assert_bitwise(cp, cs):
+    assert cs.events == cp.events
+    assert cs.metrics.records == cp.metrics.records
+    assert cs.n_active == cp.n_active
+    assert _state(cs) == _state(cp)
+    if cp.controller is not None:
+        assert cs.controller.events == cp.controller.events
+
+
+@pytest.mark.parametrize("mix", sorted(TENANT_MIXES))
+def test_tenant_mixes_bitwise(mix):
+    _assert_bitwise(*_pair(mix))
+
+
+@pytest.mark.parametrize("kw", [
+    dict(hedge=False),
+    dict(controller=None),
+    dict(shed_factor=1e9),
+    dict(min_active=2, scale_headroom=0.05),
+], ids=["hedge-off", "controller-off", "shed-off", "scale-params"])
+def test_feature_toggles_bitwise(kw):
+    _assert_bitwise(*_pair("enterprise_degraded", **kw))
+
+
+def test_heavy_shed_bitwise():
+    """Saturating rate: most requests shed to on-device fallback."""
+    cp, cs = _pair("consumer_burst", rate=300.0)
+    assert any(e["kind"] == "shed" for e in cp.events)
+    _assert_bitwise(cp, cs)
+
+
+def test_no_budget_bitwise():
+    """budget=None selects the eviction-free compile path (no vict
+    outputs, hedge leg under lax.cond) — still bitwise."""
+    cp, cs = _pair("enterprise_degraded", budget=None)
+    assert not any(e["kind"] == "evict" for e in cp.events)
+    _assert_bitwise(cp, cs)
+
+
+def test_columnar_workload_bitwise():
+    """`TenantColumns` straight into both engines (the fleet-scale
+    path: array fleets, no Request materialization on the scan side)."""
+    mix = scale_tenant_mix(1_000)
+    wl = make_tenant_columns(mix, n_requests=N, rate_hz=12.0, seed=7)
+    cp = Cluster(_replicas(), mix, engine="python")
+    cs = Cluster(_replicas(), mix, engine="scan")
+    cp.run(wl)
+    cs.run(wl)
+    _assert_bitwise(cp, cs)
+
+
+def test_sharded_bitwise():
+    import jax
+    if jax.local_device_count() < 2:
+        pytest.skip("needs 2+ XLA host devices "
+                    "(run with REPRO_HOST_DEVICES=2 or more)")
+    cp, cs2 = _pair("consumer_burst", shards=2)
+    _assert_bitwise(cp, cs2)
+
+
+# -- BlockNormals (the pre-drawn replica streams) --------------------------
+
+def test_blocknormals_matches_scalar_stream():
+    ref = np.random.default_rng(123)
+    bn = BlockNormals(np.random.default_rng(123), block=7)
+    locs = np.random.default_rng(1).uniform(-50, 50, 300)
+    scales = np.random.default_rng(2).uniform(0.1, 20, 300)
+    for loc, scale in zip(locs, scales):
+        assert bn.normal(loc, scale) == ref.normal(loc, scale)
+
+
+def test_blocknormals_take_advances_like_scalars():
+    """`take(n)` hands out the next n standard normals and leaves the
+    stream exactly where n scalar draws would — mixed freely with
+    scalar draws across block boundaries."""
+    ref = np.random.default_rng(9)
+    bn = BlockNormals(np.random.default_rng(9), block=5)
+    got = [bn.normal(), *bn.take(13), bn.normal(2.0, 3.0),
+           *bn.take(4), bn.normal()]
+    want = [ref.normal(), *[ref.normal() for _ in range(13)],
+            ref.normal(2.0, 3.0), *[ref.normal() for _ in range(4)],
+            ref.normal()]
+    assert got == want

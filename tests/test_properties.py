@@ -371,6 +371,31 @@ def test_scan_engine_matches_python_engine(seed, n_devices, estimator,
                               e["to"]) for e in eb]
 
 
+# -- scan cluster engine vs python Cluster (test_cluster_engine.py) --------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(20, 120),
+    rate=st.floats(5.0, 300.0, allow_nan=False, allow_infinity=False),
+    mix=st.sampled_from(["consumer_burst", "enterprise_degraded"]),
+    hedge=st.booleans(),
+    budget=st.booleans(),
+    controller=st.booleans(),
+)
+def test_cluster_scan_matches_python(seed, n, rate, mix, hedge, budget,
+                                     controller):
+    """Arbitrary small multi-tenant workloads: the jit lax.scan cluster
+    program and the python Cluster loop emit identical event logs,
+    metrics rows, and end-state (DESIGN.md §17)."""
+    from test_cluster_engine import _assert_bitwise, _pair
+
+    cp, cs = _pair(mix, n=n, rate=rate, seed=seed, hedge=hedge,
+                   budget=int(250e6) if budget else None,
+                   controller="reactive" if controller else None)
+    _assert_bitwise(cp, cs)
+
+
 # -- continuous batcher slot lifecycle (from test_serving.py) --------------
 
 @settings(max_examples=60, deadline=None)
